@@ -1,0 +1,120 @@
+"""Trip-count calibration for the roofline (EXPERIMENTS.md §Roofline).
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE — a scanned 126-layer
+model with 8 grad-accum microbatches underreports flops/bytes/collectives by
+~1000×. We recover per-step totals by compiling trip-count-reduced variants
+and extrapolating:
+
+  train:   per-step totals are accum-independent (accum partitions the same
+           token budget), so cost(L) = a + b·L from two A=1 unrolled points;
+           the only accum-dependent extra (grad-accumulate adds) is O(params).
+  others:  cost(L) = a + b·L               2 points: (L0), (L1)
+
+Writes exp/calibration.json: per (arch, shape, variant) corrected flops,
+bytes_accessed, and per-collective bytes.
+
+Run INSIDE the dry-run interpreter (512 host devices):
+  PYTHONPATH=src python -m benchmarks.calibrate
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def _cost(cell):
+    from repro.launch.hlo import collective_bytes
+
+    compiled = cell.lower().compile()
+    c = compiled.cost_analysis()
+    c = c[0] if isinstance(c, (list, tuple)) else c
+    coll = collective_bytes(compiled.as_text())
+    coll = {k: v for k, v in coll.items() if not k.startswith("_")}
+    return {
+        "flops": float(c.get("flops", 0.0)),
+        "bytes": float(c.get("bytes accessed", 0.0)),
+        **{f"coll_{k}": v for k, v in coll.items()},
+    }
+
+
+def _combine(fn, *costs):
+    keys = costs[0].keys()
+    return {k: fn(*[c[k] for c in costs]) for k in keys}
+
+
+def calibrate_lm(arch, shape_name, variant, mesh, L0=1, L1=2):
+    """Compile UNROLLED trip-count-reduced variants (cost analysis counts a
+    while body once; unrolled bodies are counted fully) and extrapolate."""
+    from repro.configs import registry  # noqa
+    from repro.launch.steps import build_cell
+
+    full_L = arch.model.n_layers
+    accum = arch.grad_accum.get(shape_name, 1)
+    kind = arch.shape(shape_name).kind
+
+    def with_layers(L, A):
+        m = dataclasses.replace(arch.model, n_layers=L, scan_unroll=True)
+        return dataclasses.replace(arch, model=m, grad_accum={shape_name: A},
+                                   calib_unroll=True)
+
+    del accum  # per-step totals are accum-independent (see module docstring)
+    # all kinds: cost(L) = a + b·L
+    ca = _cost(build_cell(with_layers(L0, 1), shape_name, mesh, variant))
+    cb = _cost(build_cell(with_layers(L1, 1), shape_name, mesh, variant))
+    b = _combine(lambda a, x: (x - a) / (L1 - L0), ca, cb)
+    return _combine(lambda a, bb: a + bb * (full_L - L0), ca, b)
+
+
+def calibrate_gnn(arch, shape_name, mesh, L0=1, L1=2):
+    from repro.launch.steps import build_cell
+
+    full_L = arch.model.n_layers
+
+    def with_layers(L):
+        m = dataclasses.replace(arch.model, n_layers=L, scan_unroll=True)
+        return dataclasses.replace(arch, model=m)
+
+    ca = _cost(build_cell(with_layers(L0), shape_name, mesh))
+    cb = _cost(build_cell(with_layers(L1), shape_name, mesh))
+    b = _combine(lambda a, x: (x - a) / (L1 - L0), ca, cb)
+    return _combine(lambda a, bb: a + bb * (full_L - L0), ca, b)
+
+
+def main():
+    from repro.configs import registry
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    out = {}
+    for name, arch in registry.ARCHS.items():
+        if arch.family == "lm":
+            for s in arch.shapes:
+                variants = ["base"] + (["landmark"] if s.dims.get("landmark_variant") else [])
+                for v in variants:
+                    key = f"{name}/{s.name}/{v}"
+                    try:
+                        out[key] = calibrate_lm(arch, s.name, v, mesh)
+                        print(f"[cal] {key}: flops {out[key]['flops']:.3e}", flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        print(f"[cal-fail] {key}: {e}", flush=True)
+        elif arch.family == "gnn":
+            for s in arch.shapes:
+                key = f"{name}/{s.name}/base"
+                try:
+                    out[key] = calibrate_gnn(arch, s.name, mesh)
+                    print(f"[cal] {key}: flops {out[key]['flops']:.3e}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    print(f"[cal-fail] {key}: {e}", flush=True)
+    Path("exp").mkdir(exist_ok=True)
+    Path("exp/calibration.json").write_text(json.dumps(out, indent=1))
+    print(f"wrote exp/calibration.json ({len(out)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""One benchmark per paper table/figure family, on statistics-matched
+synthetic data (raw MovieLens/Netflix are not redistributable here; see
+DESIGN.md §8). Each function returns rows of dicts and is invoked by
+``benchmarks.run``.
+
+  fig2_mae_vs_landmarks     — Fig. 2/3: MAE per #landmarks × strategy (+ baseline)
+  tab2_sim_combos           — Tables 2-5: MAE per (d1, d2) measure combo
+  tab6_runtime_vs_landmarks — Tables 6-9: fit runtime per #landmarks × strategy
+  tab10_baseline_runtime    — Table 10: full-matrix kNN runtime
+  tab15_comparative         — Table 15: how many × slower each algorithm is
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (
+    BPMFConfig,
+    fit_mf,
+    fit_predict_bpmf,
+    irsvd_config,
+    pmf_config,
+    predict_mf,
+    rsvd_config,
+    svdpp_config,
+)
+from repro.core import LandmarkSpec, fit, fit_baseline, predict
+from repro.data.ratings import kfold_split, mae, synthesize
+
+STRATEGIES = ("random", "dist_ratings", "coresets", "coresets_random", "popularity")
+
+
+def _eval_landmark(data, tr, te, spec: LandmarkSpec, key=0):
+    m = data.to_matrix(tr)
+    fit(jax.random.PRNGKey(key), m, spec).sims.block_until_ready()  # warm jit
+    t0 = time.perf_counter()
+    st = fit(jax.random.PRNGKey(key), m, spec)
+    st.sims.block_until_ready()
+    t_fit = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    preds = predict(st, jnp.asarray(data.users[te]), jnp.asarray(data.items[te]), spec)
+    preds.block_until_ready()
+    t_pred = time.perf_counter() - t0
+    return mae(np.asarray(preds), data.ratings[te]), t_fit, t_pred
+
+
+def _eval_baseline(data, tr, te, measure, mode="user"):
+    m = data.to_matrix(tr)
+    spec = LandmarkSpec(mode=mode)
+    fit_baseline(m, measure, mode).sims.block_until_ready()  # warm jit
+    t0 = time.perf_counter()
+    st = fit_baseline(m, measure, mode)
+    st.sims.block_until_ready()
+    t_fit = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    preds = predict(st, jnp.asarray(data.users[te]), jnp.asarray(data.items[te]), spec)
+    preds.block_until_ready()
+    return mae(np.asarray(preds), data.ratings[te]), t_fit, time.perf_counter() - t0
+
+
+def fig2_mae_vs_landmarks(dataset="movielens100k", landmarks=(10, 40, 70, 100),
+                          folds=2, mode="user") -> List[Dict]:
+    data = synthesize(dataset, seed=0)
+    rows = []
+    for strategy in STRATEGIES:
+        for n in landmarks:
+            errs = []
+            for f in range(folds):
+                tr, te = kfold_split(data, f)
+                spec = LandmarkSpec(n_landmarks=n, selection=strategy,
+                                    d1="euclidean", d2="cosine", mode=mode)
+                e, *_ = _eval_landmark(data, tr, te, spec, key=f)
+                errs.append(e)
+            rows.append({"dataset": dataset, "strategy": strategy, "n": n,
+                         "mae": float(np.mean(errs))})
+    # baseline CF cosine (the horizontal line in Fig. 2)
+    errs = []
+    for f in range(folds):
+        tr, te = kfold_split(data, f)
+        e, *_ = _eval_baseline(data, tr, te, "cosine", mode)
+        errs.append(e)
+    rows.append({"dataset": dataset, "strategy": "BASELINE_CF", "n": 0,
+                 "mae": float(np.mean(errs))})
+    return rows
+
+
+def tab2_sim_combos(dataset="movielens100k", n=20, strategy="popularity") -> List[Dict]:
+    data = synthesize(dataset, seed=0)
+    tr, te = kfold_split(data, 0)
+    rows = []
+    for d1 in ("euclidean", "cosine", "pearson"):
+        for d2 in ("euclidean", "cosine", "pearson"):
+            spec = LandmarkSpec(n_landmarks=n, selection=strategy, d1=d1, d2=d2)
+            e, t_fit, t_pred = _eval_landmark(data, tr, te, spec)
+            rows.append({"dataset": dataset, "d1": d1, "d2": d2, "mae": e,
+                         "fit_s": t_fit, "pred_s": t_pred})
+    return rows
+
+
+def tab6_runtime_vs_landmarks(dataset="movielens100k",
+                              landmarks=(10, 40, 70, 100)) -> List[Dict]:
+    data = synthesize(dataset, seed=0)
+    tr, te = kfold_split(data, 0)
+    rows = []
+    for strategy in STRATEGIES:
+        for n in landmarks:
+            spec = LandmarkSpec(n_landmarks=n, selection=strategy)
+            _, t_fit, t_pred = _eval_landmark(data, tr, te, spec)
+            rows.append({"dataset": dataset, "strategy": strategy, "n": n,
+                         "fit_s": t_fit, "pred_s": t_pred,
+                         "total_s": t_fit + t_pred})
+    return rows
+
+
+def tab10_baseline_runtime(dataset="movielens100k") -> List[Dict]:
+    data = synthesize(dataset, seed=0)
+    tr, te = kfold_split(data, 0)
+    rows = []
+    for mode in ("user", "item"):
+        e, t_fit, t_pred = _eval_baseline(data, tr, te, "cosine", mode)
+        rows.append({"dataset": dataset, "mode": mode, "mae": e,
+                     "total_s": t_fit + t_pred})
+    return rows
+
+
+def tab15_comparative(dataset="movielens100k", epochs=15) -> List[Dict]:
+    """Relative runtime vs Landmarks kNN (paper's bold row == 1.0)."""
+    data = synthesize(dataset, seed=0)
+    tr, te = kfold_split(data, 0)
+    rows = []
+
+    spec = LandmarkSpec(n_landmarks=20, selection="popularity")
+    lm_mae, t_fit, t_pred = _eval_landmark(data, tr, te, spec)
+    t_lm = t_fit + t_pred
+    rows.append({"algo": "Landmarks kNN", "mae": lm_mae, "time_s": t_lm, "rel": 1.0})
+
+    for meas in ("euclidean", "cosine", "pearson"):
+        e, tf, tp = _eval_baseline(data, tr, te, meas)
+        rows.append({"algo": f"{meas} kNN", "mae": e, "time_s": tf + tp,
+                     "rel": (tf + tp) / t_lm})
+
+    for name, cfgf in (("RSVD", rsvd_config), ("IRSVD", irsvd_config),
+                       ("PMF", pmf_config), ("SVD++", svdpp_config)):
+        cfg = cfgf(data.n_users, data.n_items, epochs=epochs)
+        t0 = time.perf_counter()
+        params, aux = fit_mf(data.users[tr], data.items[tr], data.ratings[tr], cfg)
+        preds = np.clip(np.asarray(
+            predict_mf(params, cfg, data.users[te], data.items[te], aux)), 1, 5)
+        dt = time.perf_counter() - t0
+        rows.append({"algo": name, "mae": mae(preds, data.ratings[te]),
+                     "time_s": dt, "rel": dt / t_lm})
+
+    t0 = time.perf_counter()
+    bcfg = BPMFConfig(data.n_users, data.n_items, n_samples=10, burnin=4)
+    preds = fit_predict_bpmf(data.users[tr], data.items[tr], data.ratings[tr],
+                             data.users[te], data.items[te], bcfg)
+    dt = time.perf_counter() - t0
+    rows.append({"algo": "BPMF", "mae": mae(np.asarray(preds), data.ratings[te]),
+                 "time_s": dt, "rel": dt / t_lm})
+    return rows
+
+
+def kernel_fusion_bench(a=2048, p=4096, n=128, iters=3) -> List[Dict]:
+    """Beyond-paper: fused-kernel schedule vs XLA multi-GEMM (wall time, CPU;
+    the HBM-traffic model is the TPU story — see EXPERIMENTS.md §Perf)."""
+    from repro.core.similarity import blocked_masked_similarity, masked_similarity
+
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 6, (a, p)).astype(np.float32) * (rng.random((a, p)) < 0.05)
+    lm = r[:n]
+    r, lm = jnp.asarray(r), jnp.asarray(lm)
+    rows = []
+    for name, fn in (("xla_multi_gemm", lambda: masked_similarity(r, lm, "cosine")),
+                     ("streamed_schedule",
+                      lambda: blocked_masked_similarity(r, lm, "cosine", chunk=1024))):
+        fn()[0].block_until_ready()  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        out.block_until_ready()
+        rows.append({"variant": name, "us_per_call": (time.perf_counter() - t0) / iters * 1e6})
+    return rows

@@ -1,0 +1,103 @@
+"""Benchmark harness: one function per paper table/figure family.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` widens the sweeps to
+the 1M-rating datasets (slower); default keeps a CPU-friendly budget.
+Roofline rows are appended when the dry-run JSON artifacts exist (exp/).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from . import paper_tables
+
+
+def _emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    datasets = ["movielens100k", "netflix100k"]
+    if args.full:
+        datasets += ["movielens1m", "netflix1m"]
+
+    print("name,us_per_call,derived")
+
+    # Fig. 2/3 — MAE vs #landmarks per strategy (+ CF baseline line)
+    for ds in datasets[:1] if not args.full else datasets:
+        t0 = time.perf_counter()
+        rows = paper_tables.fig2_mae_vs_landmarks(ds, folds=1 if not args.full else 2)
+        dt = (time.perf_counter() - t0) * 1e6
+        best = min(r["mae"] for r in rows if r["strategy"] != "BASELINE_CF")
+        base = [r["mae"] for r in rows if r["strategy"] == "BASELINE_CF"][0]
+        _emit(f"fig2_mae_vs_landmarks[{ds}]", dt,
+              f"best_landmark_mae={best:.4f};baseline_cf_mae={base:.4f};"
+              f"landmark_beats_baseline={best < base}")
+
+    # Tables 2-5 — (d1, d2) measure combos
+    t0 = time.perf_counter()
+    rows = paper_tables.tab2_sim_combos("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    spread = max(r["mae"] for r in rows) - min(r["mae"] for r in rows)
+    _emit("tab2_sim_combos[movielens100k]", dt,
+          f"mae_spread={spread:.4f};insignificant(paper:~1e-2)={spread < 0.05}")
+
+    # Tables 6-9 — runtime vs #landmarks per strategy
+    t0 = time.perf_counter()
+    rows = paper_tables.tab6_runtime_vs_landmarks("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    import numpy as np
+
+    rnd = [r for r in rows if r["strategy"] == "random"]
+    ns = np.array([r["n"] for r in rnd], float)
+    ts = np.array([r["fit_s"] for r in rnd])
+    slope = float(np.polyfit(ns, ts, 1)[0])
+    core = [r for r in rows if r["strategy"] == "coresets"]
+    _emit("tab6_runtime_vs_landmarks[movielens100k]", dt,
+          f"fit_seconds_per_landmark={slope:.2e};"
+          f"coresets_slower_than_random={core[-1]['fit_s'] > rnd[-1]['fit_s']}")
+
+    # Table 10 — baseline full-matrix kNN runtime
+    t0 = time.perf_counter()
+    rows = paper_tables.tab10_baseline_runtime("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    _emit("tab10_baseline_runtime[movielens100k]", dt,
+          ";".join(f"{r['mode']}={r['total_s']:.2f}s" for r in rows))
+
+    # Table 15 — comparative (memory- + model-based)
+    t0 = time.perf_counter()
+    rows = paper_tables.tab15_comparative("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    rel = {r["algo"]: r["rel"] for r in rows}
+    _emit("tab15_comparative[movielens100k]", dt,
+          ";".join(f"{k}={v:.1f}x" for k, v in rel.items()))
+
+    # Beyond-paper: fused-schedule kernel bench
+    for r in paper_tables.kernel_fusion_bench():
+        _emit(f"kernel_fusion[{r['variant']}]", r["us_per_call"], "")
+
+    # Roofline rows from the dry-run artifacts, if present
+    for tag in ("singlepod", "multipod"):
+        path = Path(f"exp/dryrun_{tag}.json")
+        if path.exists():
+            from . import roofline
+
+            for row in roofline.table(str(path)):
+                rf = row["roofline_fraction"]
+                _emit(
+                    f"roofline[{tag}:{row['arch']}/{row['shape']}/{row['variant']}]",
+                    max(row["t_compute_s"], row["t_memory_s"], row["t_collective_s"]) * 1e6,
+                    f"dominant={row['dominant']};roofline_frac={rf:.3f}" if rf else
+                    f"dominant={row['dominant']}",
+                )
+
+
+if __name__ == "__main__":
+    main()

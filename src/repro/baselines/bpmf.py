@@ -1,0 +1,119 @@
+"""Bayesian PMF via Gibbs sampling (Salakhutdinov & Mnih 2008).
+
+Normal-Wishart hyperpriors over user/item factor means+precisions; the factor
+conditionals are Gaussian and sampled exactly. The per-user posterior precision
+
+    Λ_u* = Λ_U + α · Σ_{v∈P_u} q_v q_vᵀ
+
+is computed for *all* users at once with a masked einsum over the dense rating
+block — the same masked-GEMM trick as the similarity core — then solved with
+batched Cholesky. Wishart draws use the Bartlett decomposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BPMFConfig:
+    n_users: int
+    n_items: int
+    dim: int = 16
+    alpha: float = 2.0  # observation precision
+    beta0: float = 2.0
+    n_samples: int = 24
+    burnin: int = 8
+    seed: int = 0
+
+
+def _wishart(key, scale_chol, df, dim):
+    """Bartlett: W = L A Aᵀ Lᵀ with A lower-tri, diag²~χ², off-diag~N(0,1)."""
+    k1, k2 = jax.random.split(key)
+    chi2 = jax.random.chisquare(k1, df - jnp.arange(dim), shape=(dim,))
+    a = jnp.diag(jnp.sqrt(chi2))
+    tril = jnp.tril(jax.random.normal(k2, (dim, dim)), -1)
+    A = a + tril
+    LA = scale_chol @ A
+    return LA @ LA.T
+
+
+def _sample_hyper(key, factors, cfg: BPMFConfig):
+    """Normal-Wishart posterior for (mu, Lambda) given factor matrix (N, d)."""
+    n, d = factors.shape
+    xbar = factors.mean(axis=0)
+    S = jnp.cov(factors.T, bias=True) + 1e-6 * jnp.eye(d)
+    beta_post = cfg.beta0 + n
+    mu_post = n * xbar / beta_post
+    df_post = d + n
+    W0inv = jnp.eye(d)
+    Winv = W0inv + n * S + (cfg.beta0 * n / beta_post) * jnp.outer(xbar, xbar)
+    W = jnp.linalg.inv(Winv)
+    k1, k2 = jax.random.split(key)
+    Lam = _wishart(k1, jnp.linalg.cholesky(W), df_post, d)
+    mu = mu_post + jax.random.multivariate_normal(
+        k2, jnp.zeros(d), jnp.linalg.inv(beta_post * Lam)
+    )
+    return mu, Lam
+
+
+def _sample_factors(key, R, M, other, mu, Lam, alpha, dim):
+    """Sample all rows' factors given the other side's factors.
+
+    R: (N, P) ratings block (0=missing) oriented so rows are the side being
+    sampled; other: (P, d).
+    """
+    # Posterior precision & mean for every row at once.
+    prec = Lam[None] + alpha * jnp.einsum("np,pd,pe->nde", M, other, other)
+    rhs = (Lam @ mu)[None] + alpha * jnp.einsum("np,pd->nd", R, other)
+    chol = jnp.linalg.cholesky(prec)
+    mean = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
+    eps = jax.random.normal(key, mean.shape)
+    # x = mean + chol^-T eps  (since cov = prec^-1 = (L Lᵀ)^-1)
+    delta = jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(chol, -1, -2), eps[..., None], lower=False
+    )[..., 0]
+    return mean + delta
+
+
+def fit_predict_bpmf(users, items, ratings, test_users, test_items, cfg: BPMFConfig):
+    """Gibbs chain; returns posterior-mean predictions for the test pairs."""
+    R = np.zeros((cfg.n_users, cfg.n_items), np.float32)
+    R[np.asarray(users), np.asarray(items)] = np.asarray(ratings)
+    R = jnp.asarray(R)
+    M = (R != 0).astype(jnp.float32)
+    mu_r = float(jnp.sum(R) / jnp.maximum(M.sum(), 1.0))
+    Rc = jnp.where(M > 0, R - mu_r, 0.0)
+
+    tu = jnp.asarray(test_users, jnp.int32)
+    ti = jnp.asarray(test_items, jnp.int32)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2, key = jax.random.split(key, 3)
+    P = jax.random.normal(k1, (cfg.n_users, cfg.dim)) * 0.1
+    Q = jax.random.normal(k2, (cfg.n_items, cfg.dim)) * 0.1
+
+    @jax.jit
+    def gibbs_step(carry, key):
+        P, Q, acc, n_acc = carry
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        mu_u, Lam_u = _sample_hyper(k1, P, cfg)
+        mu_i, Lam_i = _sample_hyper(k2, Q, cfg)
+        P = _sample_factors(k3, Rc, M, Q, mu_u, Lam_u, cfg.alpha, cfg.dim)
+        Q = _sample_factors(k4, Rc.T, M.T, P, mu_i, Lam_i, cfg.alpha, cfg.dim)
+        pred = jnp.sum(P[tu] * Q[ti], axis=-1) + mu_r
+        return (P, Q, acc + pred, n_acc + 1), None
+
+    # Burn-in (not accumulated), then averaged samples.
+    keys = jax.random.split(key, cfg.burnin + cfg.n_samples)
+    carry = (P, Q, jnp.zeros(tu.shape), 0)
+    for i in range(cfg.burnin):
+        (P, Q, _, _), _ = gibbs_step((carry[0], carry[1], carry[2] * 0, 0), keys[i])
+        carry = (P, Q, carry[2] * 0, 0)
+    carry, _ = jax.lax.scan(gibbs_step, carry, keys[cfg.burnin :])
+    _, _, acc, n_acc = carry
+    return jnp.clip(acc / jnp.maximum(n_acc, 1), 1.0, 5.0)

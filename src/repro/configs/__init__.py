@@ -1,0 +1,6 @@
+"""Architecture configs: ``registry.ARCHS`` maps --arch ids to ArchConfig."""
+from . import registry
+from .base import ArchConfig, ShapeSpec
+from .registry import ARCHS, get
+
+__all__ = ["ARCHS", "get", "ArchConfig", "ShapeSpec", "registry"]

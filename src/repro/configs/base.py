@@ -1,0 +1,91 @@
+"""Config schema: every assigned architecture is an ``ArchConfig`` with its
+exact published hyperparameters, its shape set (the dry-run cells), per-arch
+sharding-rule overrides, and a reduced smoke variant for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.train.optimizer import OptConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode | decode_landmark | train_graph |
+    #            scores | retrieval
+    dims: Dict[str, Any]
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # lm | gnn | recsys | cf
+    model: Any
+    smoke_model: Any
+    shapes: Tuple[ShapeSpec, ...]
+    source: str = ""
+    rules: Dict[str, Any] = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    opt: OptConfig = OptConfig()
+    grad_accum: Dict[str, int] = dataclasses.field(default_factory=dict)
+    calib_unroll: bool = False  # unroll micro/layer scans (cost calibration)
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.name} has no shape {name!r}; has {[s.name for s in self.shapes]}")
+
+
+# The four LM shapes shared by every transformer arch (assignment block).
+def lm_shapes(long_landmark_only: bool = True) -> Tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("train_4k", "train", dict(batch=256, seq=4096)),
+        ShapeSpec("prefill_32k", "prefill", dict(batch=32, seq=32768)),
+        ShapeSpec("decode_32k", "decode", dict(batch=128, cache_len=32768)),
+        ShapeSpec(
+            "long_500k",
+            "decode",
+            dict(batch=1, cache_len=524288, landmark_variant=True),
+            note="pure full-attention arch: baseline cell is flash-decode "
+            "(O(S)/token); the paper-technique variant decodes through landmark "
+            "summaries at O(n)/token (DESIGN.md §5).",
+        ),
+    )
+
+
+GNN_SHAPES = (
+    ShapeSpec(
+        "full_graph_sm", "train_graph", dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7)
+    ),
+    ShapeSpec(
+        "minibatch_lg",
+        "train_graph",
+        dict(
+            n_total_nodes=232965, n_total_edges=114615892, batch_nodes=1024,
+            fanouts=(15, 10), d_feat=602, n_classes=41,
+            pad_nodes=170496, pad_edges=169984,
+        ),
+        note="sampled-training: the dry-run cell is the sampled block "
+        "(1024 seeds × fanout 15·10); the host NeighborSampler feeds it.",
+    ),
+    ShapeSpec(
+        "ogb_products",
+        "train_graph",
+        dict(n_nodes=2449029, n_edges=61859140, d_feat=100, n_classes=47),
+    ),
+    ShapeSpec(
+        "molecule", "train_graph", dict(batch=128, n_nodes=30, n_edges=64, d_feat=28, n_classes=1)
+    ),
+)
+
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", dict(batch=65536)),
+    ShapeSpec("serve_p99", "scores", dict(batch=512, n_candidates=512)),
+    ShapeSpec("serve_bulk", "scores", dict(batch=262144, n_candidates=16)),
+    ShapeSpec("retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000)),
+)

@@ -1,0 +1,7 @@
+"""Arch config 'dien' — exact hyperparameters in registry.py (one source of truth)."""
+from .registry import get
+
+CONFIG = get("dien")
+MODEL = CONFIG.model
+SMOKE = CONFIG.smoke_model
+SHAPES = CONFIG.shapes

@@ -1,0 +1,7 @@
+"""Arch config 'gatedgcn' — exact hyperparameters in registry.py (one source of truth)."""
+from .registry import get
+
+CONFIG = get("gatedgcn")
+MODEL = CONFIG.model
+SMOKE = CONFIG.smoke_model
+SHAPES = CONFIG.shapes

@@ -1,0 +1,7 @@
+"""Arch config 'landmark_cf' — exact hyperparameters in registry.py (one source of truth)."""
+from .registry import get
+
+CONFIG = get("landmark_cf")
+MODEL = CONFIG.model
+SMOKE = CONFIG.smoke_model
+SHAPES = CONFIG.shapes

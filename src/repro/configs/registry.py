@@ -1,0 +1,287 @@
+"""All assigned architectures (10) + the paper-native landmark_cf config.
+
+Sources are the assignment block (``[source; verified-tier]`` inline).
+Sharding-rule overrides per arch are documented next to each config.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.types import LandmarkSpec
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import Bert4RecConfig, DIENConfig, FMConfig, MINDConfig
+from repro.models.transformer import LMConfig, MoEConfig
+from repro.train.optimizer import OptConfig
+
+from .base import ArchConfig, GNN_SHAPES, RECSYS_SHAPES, ShapeSpec, lm_shapes
+
+
+def _rules(**over) -> Dict:
+    r = dict(DEFAULT_RULES)
+    r.update(over)
+    return r
+
+
+ARCHS: Dict[str, ArchConfig] = {}
+
+
+def _register(cfg: ArchConfig):
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+# ============================================================ LM transformers
+_register(
+    ArchConfig(
+        name="llama3-405b",
+        family="lm",
+        source="arXiv:2407.21783 (unverified tier)",
+        model=LMConfig(
+            name="llama3-405b", n_layers=126, d_model=16384, n_heads=128,
+            n_kv_heads=8, head_dim=128, d_ff=53248, vocab=128256,
+            act="silu", rope_theta=500000.0,
+            shard_heads=True, shard_kv=False,  # 8 kv heads < tp16 → replicate kv
+            kv_chunk=1024, n_landmarks=512,
+        ),
+        smoke_model=LMConfig(
+            name="llama3-smoke", n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+            head_dim=16, d_ff=256, vocab=512, act="silu", n_landmarks=8,
+        ),
+        shapes=lm_shapes(),
+        rules=_rules(),  # seq→model default (SP residual) — required to fit 126
+        #                  layers of scan-saved activations in 16 GiB (DESIGN.md §6)
+        opt=OptConfig(name="adafactor", state_dtype=jnp.bfloat16),
+        grad_accum={"train_4k": 8},
+    )
+)
+
+_register(
+    ArchConfig(
+        name="smollm-360m",
+        family="lm",
+        source="hf:HuggingFaceTB/SmolLM-360M (hf tier)",
+        model=LMConfig(
+            name="smollm-360m", n_layers=32, d_model=960, n_heads=15,
+            n_kv_heads=5, head_dim=64, d_ff=2560, vocab=49152,
+            act="silu", tied_embed=True,
+            shard_heads=False,  # 15 heads % 16 != 0 → attention weights replicated
+            n_landmarks=512,
+        ),
+        smoke_model=LMConfig(
+            name="smollm-smoke", n_layers=2, d_model=96, n_heads=3, n_kv_heads=1,
+            head_dim=32, d_ff=256, vocab=512, act="silu", tied_embed=True,
+            shard_heads=False, n_landmarks=8,
+        ),
+        shapes=lm_shapes(),
+        opt=OptConfig(name="adamw"),
+        grad_accum={"train_4k": 1},
+    )
+)
+
+_register(
+    ArchConfig(
+        name="gemma-7b",
+        family="lm",
+        source="arXiv:2403.08295 (hf tier)",
+        model=LMConfig(
+            name="gemma-7b", n_layers=28, d_model=3072, n_heads=16,
+            n_kv_heads=16, head_dim=256, d_ff=24576, vocab=256000,
+            act="gelu", tied_embed=True, embed_scale=True,
+            n_landmarks=512,
+        ),
+        smoke_model=LMConfig(
+            name="gemma-smoke", n_layers=2, d_model=96, n_heads=4, n_kv_heads=4,
+            head_dim=32, d_ff=256, vocab=512, act="gelu", tied_embed=True,
+            embed_scale=True, n_landmarks=8,
+        ),
+        shapes=lm_shapes(),
+        opt=OptConfig(name="adamw"),
+        grad_accum={"train_4k": 2},
+    )
+)
+
+_register(
+    ArchConfig(
+        name="deepseek-moe-16b",
+        family="lm",
+        source="arXiv:2401.06066 (hf tier)",
+        model=LMConfig(
+            name="deepseek-moe-16b", n_layers=28, d_model=2048, n_heads=16,
+            n_kv_heads=16, head_dim=128, d_ff=0, vocab=102400, act="silu",
+            moe=MoEConfig(
+                n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+                capacity_factor=1.25, group_size=512,
+            ),
+            n_landmarks=512,
+        ),
+        smoke_model=LMConfig(
+            name="deepseek-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+            head_dim=16, d_ff=0, vocab=512, act="silu",
+            moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=2, group_size=16),
+            n_landmarks=8,
+        ),
+        shapes=lm_shapes(),
+        opt=OptConfig(name="adamw"),
+        grad_accum={"train_4k": 2},
+        notes="fine-grained MoE: 2 shared + 64 routed, top-6 (DeepSeekMoE).",
+    )
+)
+
+_register(
+    ArchConfig(
+        name="dbrx-132b",
+        family="lm",
+        source="hf:databricks/dbrx-base (unverified tier)",
+        model=LMConfig(
+            name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48,
+            n_kv_heads=8, head_dim=128, d_ff=0, vocab=100352, act="silu",
+            moe=MoEConfig(
+                n_experts=16, top_k=4, d_ff_expert=10752, n_shared=0,
+                capacity_factor=1.25, group_size=512,
+            ),
+            shard_kv=False,  # 8 kv heads < tp16
+            kv_chunk=1024, n_landmarks=512,
+        ),
+        smoke_model=LMConfig(
+            name="dbrx-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            head_dim=16, d_ff=0, vocab=512, act="silu",
+            moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64, group_size=16),
+            n_landmarks=8,
+        ),
+        shapes=lm_shapes(),
+        opt=OptConfig(name="adamw", state_dtype=jnp.bfloat16),
+        grad_accum={"train_4k": 8},
+    )
+)
+
+# ===================================================================== GNN
+_register(
+    ArchConfig(
+        name="gatedgcn",
+        family="gnn",
+        source="arXiv:2003.00982 (paper tier)",
+        model=GNNConfig(name="gatedgcn", n_layers=16, d_hidden=70),
+        smoke_model=GNNConfig(name="gatedgcn-smoke", n_layers=3, d_hidden=16, d_feat=32,
+                              n_classes=5),
+        shapes=GNN_SHAPES,
+        opt=OptConfig(name="adamw", lr=1e-3),
+        notes="paper technique inapplicable to message passing "
+        "(DESIGN.md §Arch-applicability); implemented without it.",
+    )
+)
+
+# ==================================================================== recsys
+# FM field vocabularies: criteo-like long-tail mix, 39 fields, ~45.9M rows.
+_FM_VOCABS = tuple(
+    [20_000_000, 10_000_000, 5_000_000, 2_000_000]
+    + [1_000_000] * 4
+    + [100_000] * 6
+    + [10_000] * 8
+    + [1_000] * 8
+    + [100] * 9
+)
+assert len(_FM_VOCABS) == 39
+
+_register(
+    ArchConfig(
+        name="fm",
+        family="recsys",
+        source="ICDM'10 Rendle (paper tier)",
+        model=FMConfig(name="fm", n_fields=39, embed_dim=10, field_vocabs=_FM_VOCABS),
+        smoke_model=FMConfig(
+            name="fm-smoke", n_fields=5, embed_dim=8, field_vocabs=(100, 50, 20, 10, 5)
+        ),
+        shapes=RECSYS_SHAPES,
+        opt=OptConfig(name="adamw", lr=1e-3),
+        notes="pairwise ⟨vi,vj⟩xixj via the O(nk) sum-square trick.",
+    )
+)
+
+_register(
+    ArchConfig(
+        name="bert4rec",
+        family="recsys",
+        source="arXiv:1904.06690 (paper tier)",
+        model=Bert4RecConfig(
+            name="bert4rec", n_items=1_000_000, embed_dim=64, n_blocks=2,
+            n_heads=2, seq_len=200, n_negatives=511,
+        ),
+        smoke_model=Bert4RecConfig(
+            name="bert4rec-smoke", n_items=1000, embed_dim=32, n_blocks=2, n_heads=2,
+            seq_len=20, n_negatives=32,
+        ),
+        shapes=RECSYS_SHAPES,
+        opt=OptConfig(name="adamw", lr=1e-3),
+    )
+)
+
+_register(
+    ArchConfig(
+        name="mind",
+        family="recsys",
+        source="arXiv:1904.08030 (unverified tier)",
+        model=MINDConfig(
+            name="mind", n_items=1_000_000, embed_dim=64, n_interests=4,
+            capsule_iters=3, seq_len=50, n_negatives=511,
+        ),
+        smoke_model=MINDConfig(
+            name="mind-smoke", n_items=1000, embed_dim=32, n_interests=4,
+            capsule_iters=3, seq_len=20, n_negatives=32,
+        ),
+        shapes=RECSYS_SHAPES,
+        opt=OptConfig(name="adamw", lr=1e-3),
+    )
+)
+
+_register(
+    ArchConfig(
+        name="dien",
+        family="recsys",
+        source="arXiv:1809.03672 (unverified tier)",
+        model=DIENConfig(
+            name="dien", n_items=1_000_000, embed_dim=18, seq_len=100,
+            gru_dim=108, mlp_dims=(200, 80),
+        ),
+        smoke_model=DIENConfig(
+            name="dien-smoke", n_items=1000, embed_dim=8, seq_len=20, gru_dim=16,
+            mlp_dims=(32, 16),
+        ),
+        shapes=RECSYS_SHAPES,
+        opt=OptConfig(name="adamw", lr=1e-3),
+    )
+)
+
+# ======================================= paper-native: landmark CF as an arch
+_register(
+    ArchConfig(
+        name="landmark_cf",
+        family="cf",
+        source="the reproduced paper (Lima, Mello, Zimbrão 2017)",
+        model=LandmarkSpec(n_landmarks=20, selection="popularity", d1="cosine",
+                           d2="cosine", k_neighbors=13),
+        smoke_model=LandmarkSpec(n_landmarks=8, selection="popularity"),
+        shapes=(
+            ShapeSpec("ml1m_fit", "cf_fit", dict(n_users=6040, n_items=3952)),
+            ShapeSpec("netflix1m_fit", "cf_fit", dict(n_users=8782, n_items=4577)),
+            ShapeSpec(
+                "web_fit",
+                "cf_fit",
+                dict(n_users=1_048_576, n_items=65536, n_landmarks=128),
+                note="pod-scale cell: the |P|/n collective-payload reduction "
+                "(DESIGN.md §3) at 1M users.",
+            ),
+            ShapeSpec("ml1m_predict", "cf_predict", dict(n_users=6040, n_items=3952,
+                                                         n_pairs=131072)),
+        ),
+        opt=OptConfig(),
+    )
+)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,44 @@
+"""Paper core: landmark-accelerated memory-based collaborative filtering."""
+from .types import LandmarkSpec, RatingMatrix, pad_to, round_up
+from .similarity import (
+    MEASURES,
+    corated_moments,
+    dense_similarity,
+    full_similarity_matrix,
+    masked_similarity,
+    similarity_from_distance,
+)
+from .selection import STRATEGIES, select_landmarks
+from . import knn
+from .landmark_cf import (
+    LandmarkState,
+    build_representation,
+    fit,
+    fit_baseline,
+    fit_distributed,
+    predict,
+    predict_dense,
+)
+
+__all__ = [
+    "LandmarkSpec",
+    "RatingMatrix",
+    "LandmarkState",
+    "MEASURES",
+    "STRATEGIES",
+    "corated_moments",
+    "dense_similarity",
+    "full_similarity_matrix",
+    "masked_similarity",
+    "similarity_from_distance",
+    "select_landmarks",
+    "build_representation",
+    "fit",
+    "fit_baseline",
+    "fit_distributed",
+    "predict",
+    "predict_dense",
+    "knn",
+    "pad_to",
+    "round_up",
+]

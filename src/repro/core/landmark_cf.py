@@ -1,0 +1,147 @@
+"""LandmarkCF — the paper's Algorithm 3 as a composable JAX module.
+
+Pipeline (user-based; item-based transposes the rating matrix first):
+
+  1. ``select_landmarks``            — one of the five strategies (§3.3)
+  2. ``d1 = masked_similarity``      — (U, n) user-landmark representation
+  3. ``d2 = dense_similarity``       — (U, U) similarity in landmark space
+  4. ``knn.predict_*``               — Eq. (1) rating prediction
+
+Complexity: O(|U|·n·|P|) + O(|U|²·n) instead of O(|U|²·|P|).
+
+``fit_distributed`` is the pod-scale variant (DESIGN.md §3): users sharded over
+the ('pod','data') mesh axes, landmarks replicated. The only cross-shard
+payload is the (U, n) landmark representation — a |P|/n reduction in collective
+bytes versus sharded full-matrix CF.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import knn
+from .selection import select_landmarks
+from .similarity import (
+    dense_similarity,
+    full_similarity_matrix,
+    masked_similarity,
+    similarity_from_distance,
+)
+from .types import LandmarkSpec, RatingMatrix
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LandmarkState:
+    """Fitted state: landmark ids, reduced representation, user-user sims."""
+
+    landmark_idx: jax.Array  # (n,)
+    representation: jax.Array  # (U, n) users in landmark space
+    sims: jax.Array  # (U, U) similarity in landmark space
+    ratings: jax.Array  # (U, P) the (possibly transposed) training block
+
+    def tree_flatten(self):
+        return (self.landmark_idx, self.representation, self.sims, self.ratings), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _oriented(ratings: jax.Array, mode: str) -> jax.Array:
+    if mode == "user":
+        return ratings
+    if mode == "item":
+        return ratings.T
+    raise ValueError(f"mode must be user|item, got {mode!r}")
+
+
+def build_representation(
+    ratings: jax.Array, landmark_idx: jax.Array, d1: str, sim_fn=None
+) -> jax.Array:
+    """d1 step: (U, n) similarities/distances of every user to the landmarks.
+
+    ``sim_fn`` lets callers swap in the fused Pallas kernel (ops.masked_similarity).
+    """
+    fn = sim_fn if sim_fn is not None else masked_similarity
+    return fn(ratings, ratings[landmark_idx], d1)
+
+
+def fit(
+    key: jax.Array,
+    matrix: RatingMatrix,
+    spec: LandmarkSpec,
+    sim_fn=None,
+) -> LandmarkState:
+    """Fit landmark CF on a single host/device (the paper-scale path)."""
+    r = _oriented(matrix.ratings, spec.mode)
+    idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
+    rep = build_representation(r, idx, spec.d1, sim_fn)
+    sims = dense_similarity(rep, rep, spec.d2)
+    return LandmarkState(idx, rep, sims, r)
+
+
+def predict(state: LandmarkState, users: jax.Array, items: jax.Array, spec: LandmarkSpec):
+    """Predict the requested (row, col) cells of the oriented matrix."""
+    if spec.mode == "item":
+        users, items = items, users
+    return knn.predict_pairs(state.sims, state.ratings, users, items, k=spec.k_neighbors)
+
+
+def predict_dense(state: LandmarkState, spec: LandmarkSpec) -> jax.Array:
+    preds = knn.predict_all(state.sims, state.ratings, k=spec.k_neighbors)
+    return preds.T if spec.mode == "item" else preds
+
+
+# ---------------------------------------------------------------------------
+# Baseline (paper Algorithm 1): full-matrix memory-based CF, for comparisons.
+# ---------------------------------------------------------------------------
+
+
+def fit_baseline(matrix: RatingMatrix, measure: str, mode: str = "user") -> LandmarkState:
+    r = _oriented(matrix.ratings, mode)
+    sims = full_similarity_matrix(r, measure)
+    return LandmarkState(jnp.zeros((0,), jnp.int32), jnp.zeros((r.shape[0], 0)), sims, r)
+
+
+# ---------------------------------------------------------------------------
+# Pod-scale fit: users sharded, landmarks replicated (DESIGN.md §3).
+# ---------------------------------------------------------------------------
+
+
+def fit_distributed(
+    key: jax.Array,
+    ratings: jax.Array,  # (U, P) global, sharded over user axis
+    spec: LandmarkSpec,
+    mesh: jax.sharding.Mesh,
+    user_axes=("pod", "data"),
+) -> LandmarkState:
+    """Landmark CF under pjit: the d2 matrix is computed from the (U, n)
+    representation only; GSPMD inserts a single all-gather of (U, n) instead of
+    the (U, P) rating exchange the full-matrix baseline would need.
+    """
+    axes = tuple(a for a in user_axes if a in mesh.axis_names)
+    user_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
+    rep_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
+    sims_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
+
+    @partial(
+        jax.jit,
+        in_shardings=(None, user_sharding),
+        out_shardings=(None, rep_sharding, sims_sharding),
+        static_argnums=(),
+    )
+    def _fit(key, r):
+        idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
+        landmarks = r[idx]  # gather -> replicated (n, P)
+        rep = masked_similarity(r, landmarks, spec.d1)  # local GEMMs
+        sims = dense_similarity(rep, rep, spec.d2)  # all-gather of (U, n) only
+        return idx, rep, sims
+
+    idx, rep, sims = _fit(key, ratings)
+    return LandmarkState(idx, rep, sims, ratings)

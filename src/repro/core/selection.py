@@ -1,0 +1,108 @@
+"""The paper's five landmark selection strategies (§3.3).
+
+All strategies return ``n`` row indices into the rating block. They are jittable
+(fixed trip counts; the Coresets halving loop runs a static ⌈log₂⌉ schedule).
+
+Paper cost ordering we preserve (claim C6): Random < Dist. of Ratings <
+Popularity < Coresets Random < Coresets.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .similarity import masked_similarity
+
+STRATEGIES = ("random", "dist_ratings", "coresets", "coresets_random", "popularity")
+
+
+def _counts(ratings: jax.Array) -> jax.Array:
+    return (ratings != 0).sum(axis=1).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def random_landmarks(key: jax.Array, ratings: jax.Array, n: int) -> jax.Array:
+    """n users uniformly at random (without replacement)."""
+    return jax.random.choice(key, ratings.shape[0], shape=(n,), replace=False)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def dist_ratings_landmarks(key: jax.Array, ratings: jax.Array, n: int) -> jax.Array:
+    """Random, weighted by each user's number of ratings (paper: 'Dist. of Ratings')."""
+    w = _counts(ratings)
+    p = w / jnp.maximum(w.sum(), 1.0)
+    return jax.random.choice(key, ratings.shape[0], shape=(n,), replace=False, p=p)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def popularity_landmarks(key: jax.Array, ratings: jax.Array, n: int) -> jax.Array:
+    """Top-n users by rating count (key unused; kept for a uniform signature)."""
+    del key
+    _, idx = jax.lax.top_k(_counts(ratings), n)
+    return idx
+
+
+def _coreset_rounds(n_users: int, n: int) -> int:
+    """Halving schedule: pool shrinks ~2× per round until empty (DESIGN.md §8)."""
+    return max(1, math.ceil(math.log2(max(2.0, n_users / max(n, 1)))) + 1)
+
+
+@partial(jax.jit, static_argnames=("n", "weighted"))
+def coresets_landmarks(
+    key: jax.Array, ratings: jax.Array, n: int, weighted: bool = True
+) -> jax.Array:
+    """Coresets / Coresets Random (Feldman et al. 2011 flavour, paper §3.3).
+
+    Each round: sample candidates from the remaining pool (rating-count-weighted
+    if ``weighted``), compute every remaining user's best similarity to the
+    candidates, drop the most-similar half. Candidates accumulate across rounds;
+    the first ``n`` collected are the landmarks.
+    """
+    n_users = ratings.shape[0]
+    rounds = _coreset_rounds(n_users, n)
+    per_round = max(1, math.ceil(n / rounds))
+    counts = _counts(ratings)
+
+    def body(state, key_r):
+        alive, picked, n_picked = state
+        # Sampling weights over the remaining pool.
+        w = jnp.where(alive, (counts + 1.0) if weighted else 1.0, 0.0) + 1e-9
+        p = w / jnp.maximum(w.sum(), 1e-9)
+        cand = jax.random.choice(key_r, n_users, shape=(per_round,), replace=False, p=p)
+        # Record candidates (ring-buffer write into the fixed-size pick array).
+        slots = (n_picked + jnp.arange(per_round)) % picked.shape[0]
+        picked = picked.at[slots].set(cand)
+        n_picked = n_picked + per_round
+        # Similarity of every user to the candidate set; drop the closest half.
+        sims = masked_similarity(ratings, ratings[cand], "cosine")  # (U, per_round)
+        best = jnp.max(sims, axis=1)
+        best = jnp.where(alive, best, -jnp.inf)
+        n_alive = alive.sum()
+        kth = jnp.sort(best)[::-1][jnp.maximum(n_alive // 2 - 1, 0)]
+        drop = (best >= kth) & alive
+        alive = alive & ~drop
+        alive = alive.at[cand].set(False)  # candidates leave the pool too
+        return (alive, picked, n_picked), None
+
+    alive0 = jnp.ones((n_users,), dtype=bool)
+    picked0 = jnp.zeros((rounds * per_round,), dtype=jnp.int32)
+    keys = jax.random.split(key, rounds)
+    (alive, picked, n_picked), _ = jax.lax.scan(body, (alive0, picked0, 0), keys)
+    return picked[:n]
+
+
+def select_landmarks(key: jax.Array, ratings: jax.Array, n: int, strategy: str) -> jax.Array:
+    if strategy == "random":
+        return random_landmarks(key, ratings, n)
+    if strategy == "dist_ratings":
+        return dist_ratings_landmarks(key, ratings, n)
+    if strategy == "popularity":
+        return popularity_landmarks(key, ratings, n)
+    if strategy == "coresets":
+        return coresets_landmarks(key, ratings, n, weighted=True)
+    if strategy == "coresets_random":
+        return coresets_landmarks(key, ratings, n, weighted=False)
+    raise ValueError(f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")

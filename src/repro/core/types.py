@@ -1,0 +1,97 @@
+"""Shared containers for the memory-based CF core.
+
+The rating matrix is carried in two equivalent forms:
+
+- COO triples ``(user_idx, item_idx, rating)`` — the storage/data-pipeline form.
+- A dense block ``R`` with 0 at missing entries plus the implied mask ``R != 0``
+  — the compute form. TPUs are systolic GEMM machines; all similarity math in
+  this repo is phrased as masked matrix products over dense user blocks
+  (see DESIGN.md §2). At pod scale the dense form is a *shard* of users, not
+  the whole matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RatingMatrix:
+    """Dense (padded) rating block: ``ratings[u, v] = r_uv`` or 0 if missing."""
+
+    ratings: jax.Array  # (U, P) float; 0 == missing
+    n_users: int
+    n_items: int
+
+    def tree_flatten(self):
+        return (self.ratings,), (self.n_users, self.n_items)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def mask(self) -> jax.Array:
+        return (self.ratings != 0).astype(self.ratings.dtype)
+
+    @property
+    def shape(self):
+        return self.ratings.shape
+
+    def transpose(self) -> "RatingMatrix":
+        """Item-based CF == user-based CF on the transposed matrix."""
+        return RatingMatrix(self.ratings.T, self.n_items, self.n_users)
+
+    def user_means(self) -> jax.Array:
+        """Per-user mean rating over rated items (0 for users with no ratings)."""
+        m = self.mask
+        cnt = m.sum(axis=1)
+        return jnp.where(cnt > 0, self.ratings.sum(axis=1) / jnp.maximum(cnt, 1), 0.0)
+
+    def rating_counts(self) -> jax.Array:
+        return self.mask.sum(axis=1)
+
+    @staticmethod
+    def from_coo(
+        users: np.ndarray,
+        items: np.ndarray,
+        ratings: np.ndarray,
+        n_users: int,
+        n_items: int,
+        dtype=jnp.float32,
+    ) -> "RatingMatrix":
+        dense = np.zeros((n_users, n_items), dtype=np.float32)
+        dense[users, items] = ratings
+        return RatingMatrix(jnp.asarray(dense, dtype=dtype), n_users, n_items)
+
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkSpec:
+    """Parameters of the landmark reduction (paper §3)."""
+
+    n_landmarks: int = 20
+    selection: str = "popularity"  # random|dist_ratings|coresets|coresets_random|popularity
+    d1: str = "cosine"  # user-landmark measure (Algorithm 2 family)
+    d2: str = "cosine"  # landmark-space measure (Algorithm 4 family)
+    k_neighbors: int = 13  # paper §4.4
+    mode: str = "user"  # user|item based CF
+
+
+def pad_to(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to ``size`` (sharding-friendly shapes)."""
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

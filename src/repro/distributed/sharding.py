@@ -1,0 +1,125 @@
+"""Logical-axis sharding rules (MaxText-style, hand-rolled).
+
+Every parameter/activation declares a tuple of *logical* axis names; a rules
+dict maps logical names → mesh axes. Swapping rules is how the perf hillclimb
+changes sharding without touching model code.
+
+Mesh axes: ('pod', 'data', 'model') multi-pod or ('data', 'model') single-pod.
+
+Logical axes:
+  fsdp      weight dim fully sharded over the data(+pod) axes (ZeRO-3)
+  tp        tensor-parallel dim (heads / d_ff / vocab / experts)
+  expert    MoE expert dim (maps to 'model' — EP shares the TP axis)
+  batch     activation batch dim
+  kv_seq    decode KV-cache sequence dim (flash-decoding split-K)
+  edge      GNN edge-array dim (sharded over every axis, flattened)
+  rows      embedding-table row dim (recsys model parallelism)
+  layers / null   stacked-scan layer dim / replicated
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+# Default rules; configs may override per-arch (e.g. smollm replicates heads).
+DEFAULT_RULES: Dict[str, Any] = {
+    "fsdp": ("pod", "data"),
+    "tp": "model",
+    "expert": "model",
+    "batch": ("pod", "data"),
+    "seq": "model",  # sequence-parallel residual (Megatron SP): gather at block entry,
+    #                  reduce-scatter at exit; shrinks scan-saved activations 16x.
+    "kv_seq": "model",
+    "kv_seq_all": ("data", "model"),  # long-context batch=1: shard seq everywhere
+    "edge": ("pod", "data", "model"),
+    "rows": "model",
+    "layers": None,
+    "null": None,
+    "vocab": "model",
+}
+
+
+def filter_rules(rules: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Drop mesh axes that don't exist (single-pod mesh has no 'pod')."""
+    names = set(mesh.axis_names)
+
+    def fix(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        kept = tuple(a for a in v if a in names)
+        return kept if kept else None
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def spec_for(logical: LogicalAxes, rules: Dict[str, Any]) -> P:
+    return P(*(rules.get(ax) if ax is not None else None for ax in logical))
+
+
+def sharding_for(logical: LogicalAxes, mesh: Mesh, rules: Dict[str, Any]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, filter_rules(rules, mesh)))
+
+
+def tree_shardings(logical_tree, mesh: Mesh, rules: Dict[str, Any]):
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings."""
+    rules = filter_rules(rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda la: NamedSharding(mesh, spec_for(la, rules)),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constrain(x: jax.Array, logical: LogicalAxes, rules: Dict[str, Any], mesh=None) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a mesh context."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding_for(logical, mesh, rules))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def divisible(dim: int, axes, mesh: Mesh) -> bool:
+    """Can ``dim`` be sharded over ``axes`` of ``mesh``?"""
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def shard_batch_full(x: jax.Array, mesh: Optional[Mesh], axis: int = 0) -> jax.Array:
+    """Constrain dim ``axis`` of x over EVERY mesh axis (recsys batches are
+    huge and the models tiny — compute scales with all chips, and the
+    embedding shard_map reshards ids internally as needed)."""
+    if mesh is None or mesh.empty:
+        return x
+    axes = tuple(mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if x.shape[axis] % n != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = axes
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

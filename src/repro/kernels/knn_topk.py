@@ -1,0 +1,113 @@
+"""Fused similarity + streaming top-k — the d2/kNN hot path without ever
+writing the (U, C) similarity matrix to HBM (§Perf hillclimb, web_fit cell).
+
+For L2-normalized landmark representations (cosine d2), each grid step
+computes one (bu × bc) sims tile on the MXU and folds it into a running
+(bu, k) best-list in VMEM via k rounds of max-extract-mask. HBM traffic drops
+from O(U·C) sims reads+writes to one pass over the candidate rows:
+
+  grid = (U/bu, C/bc)  c innermost arbitrary
+  VMEM: rep tile (bu, n) + cand tile (bc, n) + best (bu, k) ×2 scratch
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        best_v[...] = jnp.full_like(best_v, -jnp.inf)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    rep = rep_ref[...].astype(jnp.float32)  # (bu, n)
+    cand = cand_ref[...].astype(jnp.float32)  # (bc, n)
+    sims = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (bu, bc)
+    base = pl.program_id(1) * bc
+    bu = sims.shape[0]
+    rows = jnp.arange(bu)
+
+    bv, bi = best_v[...], best_i[...]
+    for _ in range(k):  # k rounds: extract tile max, displace the current min
+        col = jnp.argmax(sims, axis=1)
+        m = jnp.max(sims, axis=1)
+        jmin = jnp.argmin(bv, axis=1)
+        vmin = jnp.min(bv, axis=1)
+        take = m > vmin
+        bv = jnp.where(
+            take[:, None] & (jnp.arange(bv.shape[1])[None] == jmin[:, None]),
+            m[:, None], bv,
+        )
+        bi = jnp.where(
+            take[:, None] & (jnp.arange(bi.shape[1])[None] == jmin[:, None]),
+            (base + col)[:, None].astype(jnp.int32), bi,
+        )
+        sims = jnp.where(jnp.arange(sims.shape[1])[None] == col[:, None], -jnp.inf, sims)
+    best_v[...], best_i[...] = bv, bi
+
+    @pl.when(pl.program_id(1) == n_c - 1)
+    def _done():
+        val_ref[...] = best_v[...]
+        idx_ref[...] = best_i[...]
+
+
+def topk_sim_kernel(
+    rep: jax.Array,  # (U, n) L2-normalized rows (cosine) — queries
+    cand: jax.Array,  # (C, n) L2-normalized rows — candidates
+    k: int = 14,
+    block: Tuple[int, int] = (128, 512),
+    interpret: bool = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (vals, idx): for every rep row, top-k candidate dot products.
+    Requires U % bu == 0 and C % bc == 0 (pad outside)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    u, n = rep.shape
+    c = cand.shape[0]
+    bu, bc = block
+    assert u % bu == 0 and c % bc == 0, (u, c, block)
+    n_c = c // bc
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, k=k, n_c=n_c, bc=bc),
+        grid=(u // bu, n_c),
+        in_specs=[
+            pl.BlockSpec((bu, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bu, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bu, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u, k), jnp.float32),
+            jax.ShapeDtypeStruct((u, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bu, k), jnp.float32),
+            pltpu.VMEM((bu, k), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(rep, cand)
+    return vals, idx
+
+
+def topk_sim_ref(rep, cand, k=14):
+    """Oracle: dense sims + lax.top_k."""
+    sims = rep.astype(jnp.float32) @ cand.astype(jnp.float32).T
+    return jax.lax.top_k(sims, k)

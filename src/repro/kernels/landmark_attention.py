@@ -1,0 +1,103 @@
+"""Landmark-summary kernel: softmax(Q̃ Kᵀ) V streamed over the sequence.
+
+This is the O(S·n) term of landmark (Nyström) attention (DESIGN.md §5) — the
+paper's user-landmark matrix build transferred to tokens. For n landmark
+queries it streams K/V chunks HBM→VMEM once, carrying flash-style running
+(max, denom, acc) in VMEM scratch:
+
+  grid = (n/bn, S/bs)  s-innermost arbitrary
+  VMEM: q̃ tile (bn, D) + k/v tiles (bs, D) + acc (bn, D) + m/z (bn, 1)
+
+The (n × S) score matrix never exists; HBM traffic is one pass over K,V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_acc, z_acc, o_acc, *, scale, n_s):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, -jnp.inf)
+        z_acc[...] = jnp.zeros_like(z_acc)
+        o_acc[...] = jnp.zeros_like(o_acc)
+
+    q = q_ref[...].astype(jnp.float32)  # (bn, D)
+    k = k_ref[...].astype(jnp.float32)  # (bs, D)
+    v = v_ref[...].astype(jnp.float32)  # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bn, bs)
+    m_old = m_acc[...]
+    m_new = jnp.maximum(m_old, s.max(axis=1, keepdims=True))
+    alpha = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
+    p = jnp.exp(s - m_new)
+    m_acc[...] = m_new
+    z_acc[...] = z_acc[...] * alpha + p.sum(axis=1, keepdims=True)
+    o_acc[...] = o_acc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == n_s - 1)
+    def _done():
+        out_ref[...] = o_acc[...] / jnp.maximum(z_acc[...], 1e-30)
+
+
+def landmark_summary_kernel(
+    q_lm: jax.Array,  # (n, D) landmark queries
+    k: jax.Array,  # (S, D)
+    v: jax.Array,  # (S, D)
+    scale: float = None,
+    block: Tuple[int, int] = (128, 512),
+    interpret: bool = None,
+) -> jax.Array:
+    """softmax(q_lm @ kᵀ · scale) @ v → (n, D) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n0, d = q_lm.shape
+    s0 = k.shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    bn, bs = block
+    np_, sp = -(-n0 // bn) * bn, -(-s0 // bs) * bs
+    q_lm = jnp.pad(q_lm, ((0, np_ - n0), (0, 0)))
+    if sp != s0:
+        # pad K with a large negative bias trick is unnecessary: padded keys are
+        # zeros → score 0, which would pollute the softmax. Pad with -inf via a
+        # huge negative key? Instead require S % bs == 0 by padding v with zeros
+        # and masking padded keys through a -1e30 offset channel is overkill —
+        # we simply demand divisibility here and pad in the wrapper with real
+        # masking in ops.py.
+        raise ValueError(f"S ({s0}) must be divisible by the S block ({bs})")
+    n_s = sp // bs
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_s=n_s),
+        grid=(np_ // bn, n_s),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, s: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i, s: (s, 0)),
+            pl.BlockSpec((bs, d), lambda i, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bn, 1), jnp.float32),
+            pltpu.VMEM((bn, 1), jnp.float32),
+            pltpu.VMEM((bn, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )
+    return out(q_lm, k, v)[:n0]

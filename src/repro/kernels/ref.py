@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import corated_moments, _finalize
+
+
+def masked_similarity_ref(r_a: jax.Array, r_b: jax.Array, measure: str = "cosine") -> jax.Array:
+    """Oracle for kernels.masked_similarity: co-rated similarity (A, B)."""
+    return _finalize(measure, *corated_moments(r_a.astype(jnp.float32),
+                                               r_b.astype(jnp.float32)))
+
+
+def landmark_summary_ref(q_lm: jax.Array, k: jax.Array, v: jax.Array,
+                         scale: float) -> jax.Array:
+    """Oracle for kernels.landmark_summary: softmax(Q̃ Kᵀ · scale) V.
+
+    q_lm: (n, D), k/v: (S, D) → (n, D). Computed densely in f32.
+    """
+    s = (q_lm.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale  # (n, S)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v.astype(jnp.float32)
+
+
+def knn_combine_ref(sims: jax.Array, centered: jax.Array, mask: jax.Array,
+                    k: int) -> jax.Array:
+    """Oracle for kernels.knn_combine: per-row top-k threshold, then
+    num = Σ_topk s·centered, den = Σ_topk |s|·mask over the item axis.
+    sims: (U, U) (self already excluded), centered/mask: (U, P) → (U, P, 2)."""
+    vals, _ = jax.lax.top_k(sims, k)
+    kth = vals[:, -1:]
+    w = jnp.where(sims >= kth, sims, 0.0)
+    num = w @ centered
+    den = jnp.abs(w) @ mask
+    return jnp.stack([num, den], axis=-1)

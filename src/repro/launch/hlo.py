@@ -1,0 +1,59 @@
+"""HLO text analysis: collective-op byte accounting for the roofline.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+post-SPMD HLO: for every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute instruction, sum the byte size of its output shape(s).
+Shapes are parsed from the instruction's result type, e.g.
+``bf16[16,4096,2048]{2,1,0}``; tuple results sum their elements.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# instruction line:   %name = TYPE all-gather(...)    (post-optimization HLO)
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind output bytes summed over the module (one device's
+    program; multiply by participant count externally if aggregating)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        # -done ops repeat the -start shape; count each async pair once.
+        pos = m.end()
+        if hlo_text[pos - 7 : pos] == "-done(" or "-done(" in hlo_text[m.start() : pos]:
+            continue
+        out[kind] += _shape_bytes(type_str)
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out

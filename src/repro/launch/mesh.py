@@ -1,0 +1,25 @@
+"""Production meshes. v5e pod = 16×16 = 256 chips; multi-pod adds the 'pod'
+axis (DCN-connected). Functions, not module constants — importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Small mesh for fast iteration (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Single-device mesh (CPU smoke tests): every axis size 1."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,401 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked-flash
+train/prefill + cache decode), SwiGLU/GeGLU MLPs, GShard-style MoE, and the
+paper-adapted landmark (Nyström) attention (DESIGN.md §5).
+
+Everything is functional: params are dicts of arrays; a parallel dict of
+logical-axis tuples drives sharding (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# --------------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) — rotate pairs (d, d+D/2). positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention (full)
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,Hkv,G,D), k: (B,Skv,Hkv,D) -> (B,Hkv,G,Sq,Skv) f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, precision=jax.lax.Precision.DEFAULT).astype(
+        jnp.float32
+    ) * scale
+
+
+def _flash_scan(qg, kc, vc, scale, causal, q_lo, kv_chunk, skv):
+    """Run the flash recurrence for one q block over a stack of kv chunks.
+    qg: (B, Sq, Hkv, G, D); kc/vc: (n_chunks, B, Ckv, Hkv, D)."""
+    b, sq, hkv, g, d = qg.shape
+    q_pos = q_lo + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,Hkv,G,Sq), (B,Hkv,G,Sq), (B,Hkv,G,Sq,D)
+        kb, vb, c_idx = inp
+        s = _gqa_scores(qg, kb, scale)  # (B,Hkv,G,Sq,Ckv)
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        valid = (kv_pos < skv)[None, None, None, None, :]
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])[None, None, None]
+        s = jnp.where(valid, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)  # fully-masked rows
+        p = jnp.where(valid, jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(kc.shape[0]))
+    )
+    return acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,Sq,D)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    causal: bool = True,
+    kv_chunk: int = 1024,
+    q_chunk: int = 4096,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Memory-efficient attention: the FlashAttention recurrence in pure JAX.
+
+    Scores never materialize beyond (B, H, q_chunk, kv_chunk). Causal runs skip
+    whole kv chunks above the diagonal (q blocks are a static python loop, so
+    each block scans only its ≤diagonal kv prefix — no masked-out FLOPs at the
+    block level, ~2× fewer HLO flops at long context)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    n_kv = -(-skv // kv_chunk)
+    pad = n_kv * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_kv, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_kv, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    q_chunk = min(q_chunk, sq)
+    assert sq % q_chunk == 0, f"Sq {sq} % q_chunk {q_chunk} != 0"
+    outs = []
+    for qi in range(sq // q_chunk):
+        q_lo = q_offset + qi * q_chunk
+        qg = q[:, qi * q_chunk : (qi + 1) * q_chunk].reshape(b, q_chunk, hkv, g, d)
+        if causal:
+            hi = min(n_kv, -(-(q_lo + q_chunk) // kv_chunk))  # blocks ≤ diagonal
+        else:
+            hi = n_kv
+        o = _flash_scan(qg, kc[:hi], vc[:hi], scale, causal, q_lo, kv_chunk, skv)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, d))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype) if len(outs) > 1 else outs[0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, D)
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    length: jax.Array,  # () or (B,) valid cache length
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention over the cache. With the cache sequence dim sharded
+    over 'model' (kv_seq rule) GSPMD lowers the softmax reductions and the PV
+    contraction to small all-reduces — the flash-decoding split-K pattern."""
+    b, _, hq, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = _gqa_scores(qg, k_cache, scale)[:, :, :, 0, :]  # (B,Hkv,G,Skv)
+    pos = jnp.arange(skv)
+    mask = pos[None, :] < jnp.reshape(length, (-1, 1))  # (B|1, Skv)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ------------------------------------------------- landmark (Nyström) attention
+def _newton_schulz_pinv(a: jax.Array, iters: int = 8) -> jax.Array:
+    """Moore-Penrose pseudo-inverse via Newton-Schulz (Nyströmformer §3.2)."""
+    abs_a = jnp.abs(a)
+    z = a.swapaxes(-1, -2) / (abs_a.sum(-1).max(-1) * abs_a.sum(-2).max(-1))[..., None, None]
+    eye = jnp.eye(a.shape[-1], dtype=a.dtype)
+
+    def body(z, _):
+        az = a @ z
+        z = 0.25 * z @ (13.0 * eye - az @ (15.0 * eye - az @ (7.0 * eye - az)))
+        return z, None
+
+    z, _ = jax.lax.scan(body, z, None, length=iters)
+    return z
+
+
+def landmark_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    n_landmarks: int = 64,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """The paper's landmark reduction applied to attention (DESIGN.md §5).
+
+    Token–token attention is a similarity matrix over tokens, exactly like the
+    paper's user–user matrix; representing tokens by similarities to n landmark
+    tokens (segment means — the paper's 'Popularity'-like representative
+    choice) gives softmax(QKᵀ)V ≈ F̃ · pinv(Ã) · (B̃V) at O(S·n) instead of
+    O(S²). Bidirectional (encoder / scoring) form.
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    m = n_landmarks
+    assert s % m == 0, f"seq {s} must be divisible by n_landmarks {m}"
+    # landmark = segment means of q/k (the 'landmark users' of the token space)
+    q_lm = q.reshape(b, m, s // m, h, d).mean(axis=2)
+    k_lm = k.reshape(b, m, s // m, hkv, d).mean(axis=2)
+
+    qg = q.reshape(b, s, hkv, g, d)
+    qlg = q_lm.reshape(b, m, hkv, g, d)
+
+    f = jax.nn.softmax(_gqa_scores(qg, k_lm, scale), axis=-1)  # (B,Hkv,G,S,m)
+    a = jax.nn.softmax(_gqa_scores(qlg, k_lm, scale), axis=-1)  # (B,Hkv,G,m,m)
+    bt = jax.nn.softmax(_gqa_scores(qlg, k, scale), axis=-1)  # (B,Hkv,G,m,S)
+    bv = jnp.einsum("bhgms,bshd->bhgmd", bt.astype(v.dtype), v)  # (B,Hkv,G,m,D)
+    out = jnp.einsum(
+        "bhgsm,bhgmn,bhgnd->bhgsd", f.astype(v.dtype), _newton_schulz_pinv(a).astype(v.dtype), bv
+    )
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d).astype(q.dtype)
+
+
+# Landmark decode: O(n_landmarks) per token via cached landmark summaries.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LandmarkKVState:
+    """Per-layer landmark cache (replaces the (S, D) KV cache with O(n) state).
+
+    s/z/m are flash-style accumulators of softmax(Q̃ Kᵀ)V over the stream, so
+    appending a token is O(n·d) and decoding is O(n·d) — the paper's 'online
+    recommendation' property transferred to serving."""
+
+    k_lm: jax.Array  # (B, n, Hkv, D) landmark keys
+    q_lm: jax.Array  # (B, n, Hq, D)  landmark queries
+    m: jax.Array  # (B, Hkv, G, n) running max
+    z: jax.Array  # (B, Hkv, G, n) running denom
+    s: jax.Array  # (B, Hkv, G, n, D) running numerator
+
+    def tree_flatten(self):
+        return (self.k_lm, self.q_lm, self.m, self.z, self.s), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def landmark_state_init(k_lm, q_lm) -> LandmarkKVState:
+    b, n, hkv, d = k_lm.shape
+    hq = q_lm.shape[2]
+    g = hq // hkv
+    return LandmarkKVState(
+        k_lm,
+        q_lm,
+        jnp.full((b, hkv, g, n), -jnp.inf, jnp.float32),
+        jnp.zeros((b, hkv, g, n), jnp.float32),
+        jnp.zeros((b, hkv, g, n, d), jnp.float32),
+    )
+
+
+def landmark_state_append(state: LandmarkKVState, k_new, v_new, scale) -> LandmarkKVState:
+    """Fold one (or a chunk of) new KV pair(s) into the accumulators.
+    k_new/v_new: (B, T, Hkv, D)."""
+    b, n, hkv, d = state.k_lm.shape
+    g = state.q_lm.shape[2] // hkv
+    qlg = state.q_lm.reshape(b, n, hkv, g, d)
+    logits = _gqa_scores(qlg, k_new, scale)  # (B,Hkv,G,n,T)
+    m_new = jnp.maximum(state.m, logits.max(-1))
+    alpha = jnp.where(jnp.isfinite(state.m), jnp.exp(state.m - m_new), 0.0)
+    p = jnp.exp(logits - m_new[..., None])
+    z = state.z * alpha + p.sum(-1)
+    s = state.s * alpha[..., None] + jnp.einsum("bhgnt,bthd->bhgnd", p.astype(v_new.dtype), v_new)
+    return LandmarkKVState(state.k_lm, state.q_lm, m_new, z, s)
+
+
+def landmark_decode(state: LandmarkKVState, q: jax.Array, scale=None) -> jax.Array:
+    """q: (B, 1, Hq, D) -> (B, 1, Hq, D), cost O(n·d) per head."""
+    b, n, hkv, d = state.k_lm.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, 1, hkv, g, d)
+    f = jax.nn.softmax(_gqa_scores(qg, state.k_lm, scale), axis=-1)  # (B,Hkv,G,1,n)
+    qlg = state.q_lm.reshape(b, n, hkv, g, d)
+    a = jax.nn.softmax(_gqa_scores(qlg, state.k_lm, scale), axis=-1)  # (B,Hkv,G,n,n)
+    c = jnp.einsum(
+        "bhgnm,bhgmd->bhgnd",
+        _newton_schulz_pinv(a),
+        state.s / jnp.maximum(state.z, 1e-30)[..., None],
+    )
+    out = jnp.einsum("bhgqn,bhgnd->bhgqd", f.astype(c.dtype), c)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- MLP/MoE
+def glu_mlp(x, w1, w3, w2, act: str = "silu", rules=None, ffn_axis: str = "tp"):
+    """SwiGLU/GeGLU: down( act(x@w1) * (x@w3) ).
+
+    The hidden is pinned to the tensor-parallel axis (Megatron column→row):
+    without the constraint GSPMD may resolve the block batch-parallel and
+    all-gather the FULL weight per layer instead of the fsdp slice."""
+    a = jnp.einsum("bsd,df->bsf", x, w1)
+    b = jnp.einsum("bsd,df->bsf", x, w3)
+    if rules is not None:
+        a = constrain(a, ("batch", "null", ffn_axis), rules)
+        b = constrain(b, ("batch", "null", ffn_axis), rules)
+    h = (jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a, approximate=True)) * b
+    return jnp.einsum("bsf,fd->bsd", h, w2)
+
+
+def moe_ffn(
+    x: jax.Array,  # (B, S, D)
+    router_w: jax.Array,  # (D, E)
+    w1: jax.Array,  # (E, D, F)
+    w3: jax.Array,
+    w2: jax.Array,  # (E, F, D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+    act: str = "silu",
+    rules=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style dense-dispatch MoE (top-k, capacity-dropped, EP-sharded).
+
+    Tokens are grouped along the sequence dim only (the batch dim keeps its
+    ('pod','data') sharding); per group a (S_g, E, C) one-hot dispatch/combine
+    pair routes tokens into an (E, C, D) buffer that is expert-sharded over
+    'model' — GSPMD emits the all-to-all. Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    e = router_w.shape[1]
+    n_sub = max(1, s // group_size)
+    assert s % n_sub == 0, f"seq {s} not divisible into groups of {group_size}"
+    n_groups, gs = b * n_sub, s // n_sub
+    xg = x.reshape(n_groups, gs, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(gs * top_k * capacity_factor / e))
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (G,S,K,E)
+    flat = onehot.reshape(n_groups, gs * top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1  # (G, S*K, E)
+    pos = (pos * flat).sum(-1).reshape(n_groups, gs, top_k)  # slot per (token,k)
+    within_cap = pos < cap
+    # dispatch/combine tensors contracted over K directly: (G,S,E,C) only.
+    oh_e = jax.nn.one_hot(expert_idx, e, dtype=x.dtype)  # (G,S,K,E)
+    oh_c = jax.nn.one_hot(jnp.where(within_cap, pos, cap), cap + 1, dtype=x.dtype)[
+        ..., :cap
+    ]  # (G,S,K,C); overflow rows are all-zero
+    disp = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e, oh_c, gate_vals.astype(x.dtype))
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (G,E,C,D)
+    if rules is not None:  # EP: expert dim on 'model' → GSPMD emits the all-to-all
+        expert_in = constrain(expert_in, ("batch", "expert", "null", "null"), rules)
+    a = jnp.einsum("gecd,edf->gecf", expert_in, w1)
+    h = (jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a, approximate=True)) * jnp.einsum(
+        "gecd,edf->gecf", expert_in, w3
+    )
+    expert_out = jnp.einsum("gecf,efd->gecd", h, w2)
+    if rules is not None:
+        expert_out = constrain(expert_out, ("batch", "expert", "null", "null"), rules)
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+
+    # GShard load-balance aux loss.
+    density = onehot.astype(jnp.float32).sum(2).mean(1)  # (G, E) fraction routed
+    density_proxy = probs.mean(1)  # (G, E)
+    aux = (density * density_proxy).sum(-1).mean() * (e**2) / (top_k**2)
+
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn_ragged(
+    x: jax.Array,  # (B, S, D)
+    router_w: jax.Array,  # (D, E)
+    w1: jax.Array,  # (E, D, F)
+    w3: jax.Array,
+    w2: jax.Array,  # (E, F, D)
+    top_k: int,
+    act: str = "silu",
+) -> Tuple[jax.Array, jax.Array]:
+    """§Perf H1b: sort-based ragged dispatch (MegaBlocks-style) via
+    ``jax.lax.ragged_dot`` — no capacity drops, no (S, E, C) one-hot dispatch
+    GEMMs (the ~25%+ flops tax of the dense GShard formulation, §Roofline).
+
+    Single-shard reference (the EP-sharded version routes tokens by expert
+    owner with an all-to-all inside shard_map — next step in EXPERIMENTS
+    §Perf H1b). Exact routing: matches moe_ffn with ample capacity."""
+    b, s, d = x.shape
+    e = router_w.shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    eid = expert_idx.reshape(-1)  # (T·K,)
+    order = jnp.argsort(eid)
+    tok = (jnp.arange(t * top_k) // top_k)[order]
+    gates = gate_vals.reshape(-1)[order]
+    xs = jnp.take(xt, tok, axis=0)  # (T·K, D) expert-sorted
+    group_sizes = jnp.bincount(eid, length=e).astype(jnp.int32)
+
+    a = jax.lax.ragged_dot(xs, w1, group_sizes)
+    g = jax.lax.ragged_dot(xs, w3, group_sizes)
+    h = (jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a, approximate=True)) * g
+    rows = jax.lax.ragged_dot(h, w2, group_sizes)  # (T·K, D)
+    out = jax.ops.segment_sum(rows * gates[:, None].astype(rows.dtype), tok,
+                              num_segments=t)
+
+    density = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(1).mean(0)
+    aux = (density * probs.mean(0)).sum() * (e**2) / (top_k**2)
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,439 @@
+"""The four assigned recsys architectures: FM, BERT4Rec, MIND, DIEN.
+
+Shared substrate: row-sharded embedding tables (distributed/embedding.py),
+sampled-softmax training losses (vocabs are 10⁶ — full softmax is off the
+table), and a landmark-accelerated retrieval index (the paper's technique on
+the serving path, DESIGN.md §5).
+
+All models expose:  init_*  /  *_loss(params, batch)  /  *_scores(params, batch)
+and candidate scoring for ``retrieval_cand``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import round_up
+from repro.distributed.embedding import distributed_topk, embedding_bag, embedding_lookup
+from repro.distributed.sharding import constrain, shard_batch_full
+from . import layers
+
+
+# ===================================================================== FM
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    field_vocabs: Tuple[int, ...] = ()  # len == n_fields
+    dtype: Any = jnp.float32
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.field_vocabs))
+
+    @property
+    def table_rows(self) -> int:
+        # padded so the row-sharded table divides any tp axis up to 512
+        return round_up(self.total_rows, 512)
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.field_vocabs)[:-1]]).astype(np.int32)
+
+
+def fm_logical(cfg: FMConfig):
+    return {"v": ("rows", "null"), "w": ("rows",), "b": ()}
+
+
+def init_fm(key: jax.Array, cfg: FMConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "v": (jax.random.normal(k1, (cfg.table_rows, cfg.embed_dim)) * 0.01).astype(cfg.dtype),
+        "w": (jax.random.normal(k2, (cfg.table_rows,)) * 0.01).astype(cfg.dtype),
+        "b": jnp.zeros((), cfg.dtype),
+    }
+
+
+def fm_scores(params, field_ids: jax.Array, cfg: FMConfig, mesh=None) -> jax.Array:
+    """Rendle's O(nk) sum-square trick. field_ids: (B, F) already offset."""
+    v = shard_batch_full(embedding_lookup(params["v"], field_ids, mesh), mesh)
+    w = shard_batch_full(embedding_lookup(params["w"][:, None], field_ids, mesh), mesh)[..., 0]
+    sum_v = v.sum(axis=1)
+    sum_sq = (v * v).sum(axis=1)
+    pair = 0.5 * (sum_v * sum_v - sum_sq).sum(axis=-1)
+    return params["b"] + w.sum(axis=1) + pair
+
+
+def fm_loss(params, batch, cfg: FMConfig, mesh=None) -> jax.Array:
+    logits = fm_scores(params, batch["field_ids"], cfg, mesh)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def fm_retrieval(params, field_ids: jax.Array, cand_ids: jax.Array, cfg: FMConfig, k=100, mesh=None):
+    """Score one user's context against C candidate items (retrieval_cand).
+
+    FM decomposes: score(u, cand) = const(u) + w_cand + v_cand·Σv_u — a single
+    (C, D) @ (D,) matvec over the candidate rows.
+    """
+    v_u = embedding_lookup(params["v"], field_ids, mesh).sum(axis=1)  # (B, D)
+    v_c = embedding_lookup(params["v"], cand_ids, mesh)  # (C, D)
+    w_c = embedding_lookup(params["w"][:, None], cand_ids, mesh)[..., 0]  # (C,)
+    scores = jnp.einsum("bd,cd->bc", v_u, v_c) + w_c[None, :]
+    return distributed_topk(scores, k)
+
+
+# ================================================================ BERT4Rec
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_negatives: int = 511
+    dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.n_heads
+
+    @property
+    def table_rows(self) -> int:
+        return round_up(self.n_items + 1, 512)
+
+
+def bert4rec_logical(cfg: Bert4RecConfig):
+    lin = ("layers", "null", "null")
+    return {
+        "item_embed": ("rows", "null"),
+        "pos_embed": ("null", "null"),
+        "layers": {k: lin for k in ("wq", "wk", "wv", "wo", "w1", "w2")}
+        | {"ln1": ("layers", "null"), "ln2": ("layers", "null")},
+        "final_ln": ("null",),
+    }
+
+
+def init_bert4rec(key: jax.Array, cfg: Bert4RecConfig):
+    d = cfg.embed_dim
+    ks = iter(jax.random.split(key, 12))
+    w = lambda k, s: (jax.random.normal(k, s) / np.sqrt(s[-2])).astype(cfg.dtype)
+    lw = lambda k, a, b: (
+        jax.random.normal(k, (cfg.n_blocks, a, b)) / np.sqrt(a)
+    ).astype(cfg.dtype)
+    return {
+        # +1 row: the [MASK] token lives at id n_items; padded to shardable rows.
+        "item_embed": (jax.random.normal(next(ks), (cfg.table_rows, d)) * 0.02).astype(cfg.dtype),
+        "pos_embed": (jax.random.normal(next(ks), (cfg.seq_len, d)) * 0.02).astype(cfg.dtype),
+        "layers": {
+            "wq": lw(next(ks), d, d),
+            "wk": lw(next(ks), d, d),
+            "wv": lw(next(ks), d, d),
+            "wo": lw(next(ks), d, d),
+            "w1": lw(next(ks), d, 4 * d),
+            "w2": lw(next(ks), 4 * d, d),
+            "ln1": jnp.ones((cfg.n_blocks, d), cfg.dtype),
+            "ln2": jnp.ones((cfg.n_blocks, d), cfg.dtype),
+        },
+        "final_ln": jnp.ones((d,), cfg.dtype),
+    }
+
+
+def _ln(x, s):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * s
+
+
+def bert4rec_encode(params, item_ids: jax.Array, cfg: Bert4RecConfig, mesh=None) -> jax.Array:
+    """item_ids: (B, S) with -1 padding → (B, S, D) bidirectional encodings."""
+    b, s = item_ids.shape
+    x = embedding_lookup(params["item_embed"], item_ids, mesh) + params["pos_embed"][None, :s]
+    x = shard_batch_full(x, mesh)
+
+    def blk(x, lp):
+        h = _ln(x, lp["ln1"])
+        q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        a = layers.flash_attention(q, k, v, causal=False, kv_chunk=s)
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(b, s, -1), lp["wo"])
+        h = _ln(x, lp["ln2"])
+        f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["w1"]), approximate=True)
+        return x + jnp.einsum("bsf,fd->bsd", f, lp["w2"]), None
+
+    x, _ = jax.lax.scan(blk, x, params["layers"])
+    return _ln(x, params["final_ln"])
+
+
+def _sampled_softmax(user_vec, pos_ids, neg_ids, table, mesh=None):
+    """CE over [positive ∥ shared negatives]. user_vec: (..., D)."""
+    pos_e = embedding_lookup(table, pos_ids, mesh)  # (..., D)
+    neg_e = embedding_lookup(table, neg_ids, mesh)  # (N, D)
+    pos_logit = (user_vec * pos_e).sum(-1, keepdims=True)
+    neg_logit = jnp.einsum("...d,nd->...n", user_vec, neg_e)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1).astype(jnp.float32)
+    return -jax.nn.log_softmax(logits, axis=-1)[..., 0]
+
+
+def bert4rec_loss(params, batch, cfg: Bert4RecConfig, mesh=None) -> jax.Array:
+    """Masked-item prediction with sampled softmax (vocab 10⁶)."""
+    enc = bert4rec_encode(params, batch["item_ids"], cfg, mesh)  # (B,S,D)
+    mask_pos = batch["mask_positions"]  # (B, M) indices into S
+    targets = batch["targets"]  # (B, M) true item ids, -1 pad
+    vecs = jnp.take_along_axis(enc, mask_pos[..., None], axis=1)  # (B,M,D)
+    losses = _sampled_softmax(vecs, jnp.maximum(targets, 0), batch["negatives"],
+                              params["item_embed"], mesh)
+    w = (targets >= 0).astype(jnp.float32)
+    return (losses * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def bert4rec_scores(params, batch, cfg: Bert4RecConfig, mesh=None) -> jax.Array:
+    """Serve: score provided candidates for the next position."""
+    enc = bert4rec_encode(params, batch["item_ids"], cfg, mesh)
+    user = enc[:, -1]  # (B, D)
+    cand = embedding_lookup(params["item_embed"], batch["candidates"], mesh)  # (B,C,D)
+    return jnp.einsum("bd,bcd->bc", user, cand)
+
+
+def bert4rec_retrieval(params, batch, cfg: Bert4RecConfig, k=100, mesh=None):
+    enc = bert4rec_encode(params, batch["item_ids"], cfg, mesh)
+    user = enc[:, -1]
+    scores = jnp.einsum("bd,vd->bv", user, params["item_embed"])
+    scores = jnp.where(jnp.arange(scores.shape[-1]) < cfg.n_items, scores, -jnp.inf)
+    return distributed_topk(scores, k)
+
+
+# ==================================================================== MIND
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    n_negatives: int = 511
+    dtype: Any = jnp.float32
+
+    @property
+    def table_rows(self) -> int:
+        return round_up(self.n_items, 512)
+
+
+def mind_logical(cfg: MINDConfig):
+    return {"item_embed": ("rows", "null"), "s_matrix": ("null", "null")}
+
+
+def init_mind(key: jax.Array, cfg: MINDConfig):
+    k1, k2 = jax.random.split(key)
+    d = cfg.embed_dim
+    return {
+        "item_embed": (jax.random.normal(k1, (cfg.table_rows, d)) * 0.02).astype(cfg.dtype),
+        "s_matrix": (jax.random.normal(k2, (d, d)) / np.sqrt(d)).astype(cfg.dtype),
+    }
+
+
+def _squash(x):
+    n2 = (x * x).sum(-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def mind_interests(params, item_ids: jax.Array, cfg: MINDConfig, mesh=None) -> jax.Array:
+    """B2I dynamic routing → (B, K, D) interest capsules."""
+    e = shard_batch_full(embedding_lookup(params["item_embed"], item_ids, mesh), mesh)
+    msg = jnp.einsum("bsd,de->bse", e, params["s_matrix"])
+    valid = (item_ids >= 0).astype(jnp.float32)
+    b_init = jnp.zeros((e.shape[0], cfg.n_interests, e.shape[1]), jnp.float32)
+
+    def route(b_logits, _):
+        w = jax.nn.softmax(b_logits, axis=1) * valid[:, None, :]
+        z = jnp.einsum("bks,bsd->bkd", w, msg)
+        caps = _squash(z)
+        b_new = b_logits + jnp.einsum("bkd,bsd->bks", caps, msg)
+        return b_new, caps
+
+    b_final, caps_seq = jax.lax.scan(route, b_init, None, length=cfg.capsule_iters)
+    return caps_seq[-1]  # (B,K,D)
+
+
+def mind_loss(params, batch, cfg: MINDConfig, mesh=None) -> jax.Array:
+    caps = mind_interests(params, batch["item_ids"], cfg, mesh)  # (B,K,D)
+    target_e = embedding_lookup(params["item_embed"], batch["targets"], mesh)  # (B,D)
+    # label-aware attention: pick the interest most aligned with the target
+    att = jax.nn.softmax(jnp.einsum("bkd,bd->bk", caps, target_e) * 2.0, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, caps)
+    losses = _sampled_softmax(user, batch["targets"], batch["negatives"],
+                              params["item_embed"], mesh)
+    return losses.mean()
+
+
+def mind_scores(params, batch, cfg: MINDConfig, mesh=None) -> jax.Array:
+    caps = mind_interests(params, batch["item_ids"], cfg, mesh)
+    cand = embedding_lookup(params["item_embed"], batch["candidates"], mesh)  # (B,C,D)
+    return jnp.einsum("bkd,bcd->bkc", caps, cand).max(axis=1)
+
+
+def mind_retrieval(params, batch, cfg: MINDConfig, k=100, mesh=None):
+    caps = mind_interests(params, batch["item_ids"], cfg, mesh)
+    scores = jnp.einsum("bkd,vd->bkv", caps, params["item_embed"]).max(axis=1)
+    scores = jnp.where(jnp.arange(scores.shape[-1]) < cfg.n_items, scores, -jnp.inf)
+    return distributed_topk(scores, k)
+
+
+# ==================================================================== DIEN
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, int] = (200, 80)
+    dtype: Any = jnp.float32
+
+    @property
+    def table_rows(self) -> int:
+        return round_up(self.n_items, 512)
+
+
+def _gru_params(key, d_in, d_h, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(d_in + d_h)
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 3 * d_h)) * s).astype(dtype),
+        "wh": (jax.random.normal(k2, (d_h, 3 * d_h)) * s).astype(dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def dien_logical(cfg: DIENConfig):
+    gru = {"wx": ("null", "null"), "wh": ("null", "null"), "b": ("null",)}
+    return {
+        "item_embed": ("rows", "null"),
+        "gru1": gru,
+        "gru2": gru,
+        "att_w": ("null", "null"),
+        "mlp_w1": ("null", "null"),
+        "mlp_b1": ("null",),
+        "mlp_w2": ("null", "null"),
+        "mlp_b2": ("null",),
+        "mlp_w3": ("null", "null"),
+        "mlp_b3": (),
+    }
+
+
+def init_dien(key: jax.Array, cfg: DIENConfig):
+    ks = iter(jax.random.split(key, 10))
+    d, g = cfg.embed_dim, cfg.gru_dim
+    w = lambda k, s: (jax.random.normal(k, s) / np.sqrt(s[0])).astype(cfg.dtype)
+    d_in_mlp = g + 2 * d  # final interest + target embed + user mean embed
+    return {
+        "item_embed": (jax.random.normal(next(ks), (cfg.table_rows, d)) * 0.02).astype(cfg.dtype),
+        "gru1": _gru_params(next(ks), d, g, cfg.dtype),
+        "gru2": _gru_params(next(ks), g, g, cfg.dtype),
+        "att_w": w(next(ks), (g, d)),
+        "mlp_w1": w(next(ks), (d_in_mlp, cfg.mlp_dims[0])),
+        "mlp_b1": jnp.zeros((cfg.mlp_dims[0],), cfg.dtype),
+        "mlp_w2": w(next(ks), (cfg.mlp_dims[0], cfg.mlp_dims[1])),
+        "mlp_b2": jnp.zeros((cfg.mlp_dims[1],), cfg.dtype),
+        "mlp_w3": w(next(ks), (cfg.mlp_dims[1], 1)),
+        "mlp_b3": jnp.zeros((), cfg.dtype),
+    }
+
+
+def _gru_step(p, h, x, a=None):
+    """Standard GRU; if ``a`` given, the update gate is scaled by it (AUGRU)."""
+    gx = jnp.einsum("bd,dk->bk", x, p["wx"]) + p["b"]
+    gh = jnp.einsum("bh,hk->bk", h, p["wh"])
+    zx, rx, nx = jnp.split(gx, 3, axis=-1)
+    zh, rh, nh = jnp.split(gh, 3, axis=-1)
+    z = jax.nn.sigmoid(zx + zh)
+    if a is not None:
+        z = z * a[:, None]
+    r = jax.nn.sigmoid(rx + rh)
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * h + z * n
+
+
+def dien_logits(params, batch, cfg: DIENConfig, mesh=None) -> jax.Array:
+    hist = batch["item_ids"]  # (B, S)
+    target = batch["targets"]  # (B,)
+    e = shard_batch_full(embedding_lookup(params["item_embed"], hist, mesh), mesh)
+    te = shard_batch_full(embedding_lookup(params["item_embed"], target, mesh), mesh)
+    b, s, d = e.shape
+    valid = (hist >= 0).astype(e.dtype)
+
+    # Interest extraction GRU over the history.
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_step(params["gru1"], h, x)
+        h = m[:, None] * h_new + (1 - m[:, None]) * h
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    _, states = jax.lax.scan(step1, h0, (e.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)  # (B,S,G)
+
+    # Attention of each interest state vs the target item (DIN-style).
+    att = jax.nn.softmax(
+        jnp.einsum("bsg,gd,bd->bs", states, params["att_w"], te)
+        + (valid - 1.0) * 1e9,
+        axis=-1,
+    )
+
+    # Interest-evolving AUGRU.
+    def step2(h, xs):
+        x, a, m = xs
+        h_new = _gru_step(params["gru2"], h, x, a)
+        h = m[:, None] * h_new + (1 - m[:, None]) * h
+        return h, None
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    h_final, _ = jax.lax.scan(
+        step2, h0, (states.swapaxes(0, 1), att.swapaxes(0, 1), valid.swapaxes(0, 1))
+    )
+
+    mean_e = (e * valid[..., None]).sum(1) / jnp.maximum(valid.sum(1, keepdims=True), 1.0)
+    feat = jnp.concatenate([h_final, te, mean_e], axis=-1)
+    h = jax.nn.relu(jnp.einsum("bf,fk->bk", feat, params["mlp_w1"]) + params["mlp_b1"])
+    h = jax.nn.relu(jnp.einsum("bf,fk->bk", h, params["mlp_w2"]) + params["mlp_b2"])
+    return jnp.einsum("bf,fk->bk", h, params["mlp_w3"])[:, 0] + params["mlp_b3"]
+
+
+def dien_loss(params, batch, cfg: DIENConfig, mesh=None) -> jax.Array:
+    logits = dien_logits(params, batch, cfg, mesh)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dien_retrieval(params, batch, cfg: DIENConfig, k=100, mesh=None):
+    """1M candidates: GRU interest state dotted with candidate embeddings
+    (the AUGRU re-ranks the top-k shortlist in a second stage)."""
+    hist = batch["item_ids"]
+    e = embedding_lookup(params["item_embed"], hist, mesh)
+    b, s, d = e.shape
+    valid = (hist >= 0).astype(e.dtype)
+
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_step(params["gru1"], h, x)
+        return m[:, None] * h_new + (1 - m[:, None]) * h, None
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    h_final, _ = jax.lax.scan(step1, h0, (e.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    user = jnp.einsum("bg,gd->bd", h_final, params["att_w"])
+    scores = jnp.einsum("bd,vd->bv", user, params["item_embed"])
+    scores = jnp.where(jnp.arange(scores.shape[-1]) < cfg.n_items, scores, -jnp.inf)
+    return distributed_topk(scores, k)

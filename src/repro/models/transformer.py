@@ -1,0 +1,471 @@
+"""Decoder-only LM covering the five assigned transformer architectures.
+
+Features: GQA (+kv-head replication-free decode via seq-sharded caches), RoPE,
+SwiGLU/GeGLU, GShard-style MoE with shared experts (DeepSeekMoE/DBRX), tied or
+untied vocab, scan-over-layers with remat, chunked flash attention, and the
+paper-adapted landmark attention backend (DESIGN.md §5).
+
+Params are plain dicts; ``lm_logical`` returns the matching logical-axis tree
+consumed by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from . import layers
+from .layers import (
+    LandmarkKVState,
+    decode_attention,
+    flash_attention,
+    glu_mlp,
+    landmark_attention,
+    landmark_decode,
+    landmark_state_append,
+    landmark_state_init,
+    moe_ffn,
+    rms_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"  # silu (llama/deepseek/dbrx) | gelu (gemma geglu)
+    tied_embed: bool = False
+    rope_theta: float = 10000.0
+    embed_scale: bool = False  # gemma: x *= sqrt(d_model)
+    moe: Optional[MoEConfig] = None
+    shard_heads: bool = True  # False when n_heads % tp != 0 (smollm)
+    shard_kv: bool = True  # False when n_kv_heads % tp != 0 (llama, dbrx)
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    kv_chunk: int = 2048
+    q_chunk: int = 1 << 30  # no q-loop by default: the seq-sharded residual already
+    #                         splits q rows across 'model'; set smaller to bound
+    #                         score-block VMEM when seq sharding is off
+    n_landmarks: int = 512  # landmark attention backend
+    attn_backend: str = "full"  # full | landmark
+    scan_unroll: bool = False  # unroll layer scans (trip-count calibration only)
+    kv_quant: bool = False  # int8 KV cache (+per-token-head scales): halves the
+    #                         decode HBM read — the dominant decode roofline term
+    iota_embed: bool = False  # §Perf: the one-hot einsum costs 2·T·V·D real MXU
+    #                           flops (13-30x useful compute at 100k+ vocabs);
+    #                           gather is the right lookup. True kept for A/B.
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, l = self.d_model, self.n_layers
+        attn = d * self.q_dim * 2 + d * self.kv_dim * 2
+        if self.moe:
+            m = self.moe
+            ffn = d * m.n_experts + 3 * d * m.d_ff_expert * (m.n_experts + m.n_shared)
+        else:
+            ffn = 3 * d * self.d_ff
+        embed = self.vocab * d * (1 if self.tied_embed else 2)
+        return l * (attn + ffn + 2 * d) + embed + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d, l, m = self.d_model, self.n_layers, self.moe
+        attn = d * self.q_dim * 2 + d * self.kv_dim * 2
+        ffn = d * m.n_experts + 3 * d * m.d_ff_expert * (m.top_k + m.n_shared)
+        embed = self.vocab * d * (1 if self.tied_embed else 2)
+        return l * (attn + ffn + 2 * d) + embed + d
+
+
+# ------------------------------------------------------------------ init/logical
+def _layer_shapes(cfg: LMConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    d, dt = cfg.d_model, cfg.dtype
+    tp_q = "tp" if cfg.shard_heads else "null"
+    tp_kv = "tp" if (cfg.shard_heads and cfg.shard_kv) else "null"
+    out: Dict[str, Tuple[Tuple[int, ...], Tuple]] = {
+        "attn_norm": ((d,), ("layers", "null")),
+        "mlp_norm": ((d,), ("layers", "null")),
+        "wq": ((d, cfg.q_dim), ("layers", "fsdp", tp_q)),
+        "wk": ((d, cfg.kv_dim), ("layers", "fsdp", tp_kv)),
+        "wv": ((d, cfg.kv_dim), ("layers", "fsdp", tp_kv)),
+        "wo": ((cfg.q_dim, d), ("layers", tp_q, "fsdp")),
+    }
+    if cfg.moe:
+        m = cfg.moe
+        out |= {
+            "router": ((d, m.n_experts), ("layers", "fsdp", "null")),
+            "ew1": ((m.n_experts, d, m.d_ff_expert), ("layers", "expert", "fsdp", "null")),
+            "ew3": ((m.n_experts, d, m.d_ff_expert), ("layers", "expert", "fsdp", "null")),
+            "ew2": ((m.n_experts, m.d_ff_expert, d), ("layers", "expert", "null", "fsdp")),
+        }
+        if m.n_shared:
+            f = m.n_shared * m.d_ff_expert
+            out |= {
+                "sw1": ((d, f), ("layers", "fsdp", "tp")),
+                "sw3": ((d, f), ("layers", "fsdp", "tp")),
+                "sw2": ((f, d), ("layers", "tp", "fsdp")),
+            }
+    else:
+        out |= {
+            "w1": ((d, cfg.d_ff), ("layers", "fsdp", "tp")),
+            "w3": ((d, cfg.d_ff), ("layers", "fsdp", "tp")),
+            "w2": ((cfg.d_ff, d), ("layers", "tp", "fsdp")),
+        }
+    return out
+
+
+def lm_logical(cfg: LMConfig):
+    tree = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": ("null",),
+        "layers": {k: la for k, (_, la) in _layer_shapes(cfg).items()},
+    }
+    if not cfg.tied_embed:
+        tree["unembed"] = ("fsdp", "vocab")
+    return tree
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    shapes = _layer_shapes(cfg)
+    n_leaves = len(shapes) + 2
+    keys = iter(jax.random.split(key, n_leaves + 4))
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)).astype(cfg.dtype)
+
+    layers_p = {}
+    for name, (shape, _) in shapes.items():
+        full = (cfg.n_layers,) + shape
+        if "norm" in name:
+            layers_p[name] = jnp.zeros(full, cfg.dtype)
+        else:
+            layers_p[name] = w(next(keys), full, shape[-2] if len(shape) >= 2 else shape[-1])
+    params = {
+        "embed": w(next(keys), (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": layers_p,
+    }
+    if not cfg.tied_embed:
+        params["unembed"] = w(next(keys), (cfg.d_model, cfg.vocab), cfg.d_model)
+    return params
+
+
+# ------------------------------------------------------------------- embeddings
+def embed_tokens(params, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    if cfg.iota_embed:
+        onehot = jax.nn.one_hot(tokens, cfg.vocab, dtype=cfg.dtype)
+        x = jnp.einsum("bsv,vd->bsd", onehot, params["embed"])
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    return x
+
+
+def logits_from(params, x: jax.Array, cfg: LMConfig, rules=None) -> jax.Array:
+    w = params["embed"].T if cfg.tied_embed else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    if rules is not None:
+        # Keep vocab sharded: without this GSPMD may replicate the (d, V)
+        # projection (8.4 GB f32 for llama3-405b) instead of gathering seq.
+        logits = constrain(logits, ("batch", "null", "vocab"), rules)
+    return logits
+
+
+# ---------------------------------------------------------------------- blocks
+def _ffn(x, lp, cfg: LMConfig, rules=None):
+    """Dense or MoE FFN; returns (out, aux_loss)."""
+    if cfg.moe is None:
+        return glu_mlp(x, lp["w1"], lp["w3"], lp["w2"], cfg.act, rules), 0.0
+    m = cfg.moe
+    out, aux = moe_ffn(
+        x, lp["router"], lp["ew1"], lp["ew3"], lp["ew2"],
+        top_k=m.top_k, capacity_factor=m.capacity_factor,
+        group_size=m.group_size, act=cfg.act, rules=rules,
+    )
+    if m.n_shared:
+        out = out + glu_mlp(x, lp["sw1"], lp["sw3"], lp["sw2"], cfg.act, rules)
+    return out, aux
+
+
+def _attn_qkv(x, lp, cfg: LMConfig, positions, rules=None):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dq->bsq", x, lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dq->bsq", x, lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if rules is not None:
+        # Pin heads to tp (when shardable) so wq/wk/wv gather only their fsdp
+        # slice; GQA with n_kv < tp keeps k/v replicated (shard_kv=False).
+        hq = "tp" if cfg.shard_heads else "null"
+        hkv = "tp" if (cfg.shard_heads and cfg.shard_kv) else "null"
+        q = constrain(q, ("batch", "null", hq, "null"), rules)
+        k = constrain(k, ("batch", "null", hkv, "null"), rules)
+        v = constrain(v, ("batch", "null", hkv, "null"), rules)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def block(x, lp, cfg: LMConfig, positions, rules) -> Tuple[jax.Array, jax.Array]:
+    """One transformer block (train/prefill, causal). Returns (x, moe_aux)."""
+    b, s, _ = x.shape
+    h = rms_norm(x, lp["attn_norm"])
+    q, k, v = _attn_qkv(h, lp, cfg, positions, rules)
+    if cfg.attn_backend == "landmark" and s > cfg.n_landmarks:
+        attn = landmark_attention(q, k, v, n_landmarks=cfg.n_landmarks)
+    else:
+        attn = flash_attention(q, k, v, causal=True, kv_chunk=min(cfg.kv_chunk, s),
+                               q_chunk=min(cfg.q_chunk, s))
+    attn = jnp.einsum("bsq,qd->bsd", attn.reshape(b, s, cfg.q_dim), lp["wo"])
+    x = constrain(x + attn, ("batch", "seq", "null"), rules)
+    h = rms_norm(x, lp["mlp_norm"])
+    f, aux = _ffn(h, lp, cfg, rules)
+    x = constrain(x + f, ("batch", "seq", "null"), rules)
+    return x, aux
+
+
+# ------------------------------------------------------------------ full passes
+def lm_forward(params, tokens: jax.Array, cfg: LMConfig, rules) -> Tuple[jax.Array, jax.Array]:
+    """Causal forward; returns (logits f32, moe_aux)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params, tokens, cfg)
+
+    def layer_fn(x, lp):
+        y, aux = block(x, lp, cfg, positions, rules)
+        return y, aux
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(layer_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_from(params, x, cfg, rules), jnp.sum(auxs)
+
+
+def lm_loss(params, batch: Dict[str, jax.Array], cfg: LMConfig, rules) -> jax.Array:
+    logits, aux = lm_forward(params, batch["tokens"], cfg, rules)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    # Vocab-sharding-safe CE: no gather over the (sharded) vocab axis —
+    # label logit via one-hot contraction (psum over 'model'), logsumexp via
+    # sharded reduction. take_along_axis here would all-gather the logits and
+    # blow the (d_model × vocab) grad partial up to its full, unsharded size.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), cfg.vocab, dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    ce = ((lse - label_logit) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + 0.01 * aux
+
+
+# --------------------------------------------------------------------- serving
+def make_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = jnp.int8 if cfg.kv_quant else (dtype or cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if cfg.kv_quant:  # per (token, head) scales
+        sshape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return cache
+
+
+def _kv_quantize(x):
+    """x (B, T, H, D) → (int8, per-(token,head) scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_logical(long_context: bool = False, kv_quant: bool = False):
+    seq = "kv_seq_all" if long_context else "kv_seq"
+    out = {
+        "k": ("layers", "batch", seq, "null", "null"),
+        "v": ("layers", "batch", seq, "null", "null"),
+        "length": (),
+    }
+    if kv_quant:
+        out["k_scale"] = ("layers", "batch", seq, "null")
+        out["v_scale"] = ("layers", "batch", seq, "null")
+    return out
+
+
+def lm_prefill(params, tokens: jax.Array, cfg: LMConfig, rules, max_seq: Optional[int] = None):
+    """Run the prompt; returns (last-token logits, cache)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params, tokens, cfg)
+
+    def layer_fn(x, lp):
+        h = rms_norm(x, lp["attn_norm"])
+        q, k, v = _attn_qkv(h, lp, cfg, positions, rules)
+        attn = flash_attention(q, k, v, causal=True, kv_chunk=min(cfg.kv_chunk, s),
+                               q_chunk=min(cfg.q_chunk, s))
+        attn = jnp.einsum("bsq,qd->bsd", attn.reshape(b, s, cfg.q_dim), lp["wo"])
+        x = constrain(x + attn, ("batch", "seq", "null"), rules)
+        h2 = rms_norm(x, lp["mlp_norm"])
+        f, _ = _ffn(h2, lp, cfg, rules)
+        x = constrain(x + f, ("batch", "seq", "null"), rules)
+        kp = jnp.pad(k, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+        return x, (kp, vp)
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(layer_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_from(params, x[:, -1:, :], cfg, rules)
+    cache = {"k": ks, "v": vs, "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def lm_decode_step(params, cache, token: jax.Array, cfg: LMConfig, rules):
+    """One decode step. token: (B, 1) int32. Returns (logits, new cache).
+    With ``cfg.kv_quant`` the cache holds int8 + per-(token,head) scales:
+    the dominant decode HBM read halves (§Perf beyond-paper)."""
+    b = token.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = embed_tokens(params, token, cfg)
+    quant = cfg.kv_quant
+
+    def layer_fn(x, inp):
+        if quant:
+            lp, k_cache, v_cache, k_sc, v_sc = inp
+        else:
+            lp, k_cache, v_cache = inp
+        h = rms_norm(x, lp["attn_norm"])
+        q, k, v = _attn_qkv(h, lp, cfg, positions, rules)
+        if quant:
+            kq, ks_new = _kv_quantize(k)
+            vq, vs_new = _kv_quantize(v)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, pos, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, pos, 1)
+            k_sc = jax.lax.dynamic_update_slice_in_dim(k_sc, ks_new, pos, 1)
+            v_sc = jax.lax.dynamic_update_slice_in_dim(v_sc, vs_new, pos, 1)
+            k_full = _kv_dequantize(k_cache, k_sc, cfg.dtype)
+            v_full = _kv_dequantize(v_cache, v_sc, cfg.dtype)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), pos, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), pos, 1)
+            k_full, v_full = k_cache, v_cache
+        attn = decode_attention(q, k_full, v_full, pos + 1)
+        attn = jnp.einsum("bsq,qd->bsd", attn.reshape(b, 1, cfg.q_dim), lp["wo"])
+        x = x + attn
+        h2 = rms_norm(x, lp["mlp_norm"])
+        f, _ = _ffn(h2, lp, cfg, rules)
+        if quant:
+            return x + f, (k_cache, v_cache, k_sc, v_sc)
+        return x + f, (k_cache, v_cache)
+
+    if quant:
+        xs = (params["layers"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        x, (ks, vs, kss, vss) = jax.lax.scan(layer_fn, x, xs, unroll=cfg.scan_unroll)
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss,
+                     "length": pos + 1}
+    else:
+        x, (ks, vs) = jax.lax.scan(
+            layer_fn, x, (params["layers"], cache["k"], cache["v"]),
+            unroll=cfg.scan_unroll)
+        new_cache = {"k": ks, "v": vs, "length": pos + 1}
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_from(params, x, cfg, rules)
+    return logits, new_cache
+
+
+# ------------------------------------------------------- landmark decode serving
+def make_landmark_cache(cfg: LMConfig, batch: int):
+    """O(n_landmarks) decode state per layer (stacked), DESIGN.md §5."""
+    n, dh = cfg.n_landmarks, cfg.head_dim
+    l, hkv, hq = cfg.n_layers, cfg.n_kv_heads, cfg.n_heads
+    g = hq // hkv
+    return {
+        "k_lm": jnp.zeros((l, batch, n, hkv, dh), cfg.dtype),
+        "q_lm": jnp.zeros((l, batch, n, hq, dh), cfg.dtype),
+        "m": jnp.full((l, batch, hkv, g, n), -jnp.inf, jnp.float32),
+        "z": jnp.zeros((l, batch, hkv, g, n), jnp.float32),
+        "s": jnp.zeros((l, batch, hkv, g, n, dh), jnp.float32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def landmark_cache_logical():
+    return {
+        "k_lm": ("layers", "batch", "null", "null", "null"),
+        "q_lm": ("layers", "batch", "null", "null", "null"),
+        "m": ("layers", "batch", "null", "null", "null"),
+        "z": ("layers", "batch", "null", "null", "null"),
+        "s": ("layers", "batch", "null", "null", "null"),
+        "length": (),
+    }
+
+
+def lm_landmark_decode_step(params, cache, token: jax.Array, cfg: LMConfig, rules):
+    """Decode against the landmark summaries — O(n·d) per token per layer."""
+    b = token.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = embed_tokens(params, token, cfg)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+
+    def layer_fn(x, inp):
+        lp, k_lm, q_lm, m, z, s = inp
+        st = LandmarkKVState(k_lm, q_lm, m, z, s)
+        h = rms_norm(x, lp["attn_norm"])
+        q, k, v = _attn_qkv(h, lp, cfg, positions, rules)
+        st = landmark_state_append(st, k, v, scale)
+        attn = landmark_decode(st, q, scale)
+        attn = jnp.einsum("bsq,qd->bsd", attn.reshape(b, 1, cfg.q_dim), lp["wo"])
+        x = x + attn
+        h2 = rms_norm(x, lp["mlp_norm"])
+        f, _ = _ffn(h2, lp, cfg, rules)
+        return x + f, (st.m, st.z, st.s)
+
+    x, (ms, zs, ss) = jax.lax.scan(
+        layer_fn,
+        x,
+        (params["layers"], cache["k_lm"], cache["q_lm"], cache["m"], cache["z"], cache["s"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_from(params, x, cfg, rules)
+    new_cache = dict(cache, m=ms, z=zs, s=ss, length=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,143 @@
+"""Sharded checkpointing with atomic commit, keep-k GC, and elastic restore.
+
+Layout (no tensorstore/orbax in the container — plain .npy per leaf-shard):
+
+  <dir>/step_000100.tmp/            # written first
+      manifest.json                 # step, tree structure, shapes, dtypes
+      leaf_000/shard_000.npy ...    # one file per (leaf, addressable shard)
+  <dir>/step_000100/                # atomic rename on success
+
+Restore reshards: each leaf is reassembled from its shard files and re-placed
+with ``jax.device_put`` under the *current* mesh/sharding — restoring a
+512-chip checkpoint onto a 256-chip mesh (elastic downscale) just works, since
+shards carry their global index ranges in the manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> Path:
+    """Write a sharded checkpoint; atomic via tmp-dir + rename."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    manifest: Dict[str, Any] = {"step": step, "n_leaves": len(leaves), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        leaf_dir = tmp / f"leaf_{i:04d}"
+        leaf_dir.mkdir()
+        arr = leaf if isinstance(leaf, jax.Array) else jax.numpy.asarray(leaf)
+        shards = []
+        seen = set()
+        for j, sh in enumerate(arr.addressable_shards):
+            key = tuple(
+                (s.start or 0, s.stop if s.stop is not None else arr.shape[d])
+                for d, s in enumerate(sh.index)
+            ) if sh.index else ()
+            if key in seen:  # replicated shard — store once
+                continue
+            seen.add(key)
+            host = np.asarray(sh.data)
+            if host.dtype.name == "bfloat16":  # numpy can't cast ml_dtypes
+                host = host.view(np.uint16)
+            np.save(leaf_dir / f"shard_{j:04d}.npy", host)
+            shards.append({"file": f"shard_{j:04d}.npy", "index": key})
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype), "shards": shards}
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+
+    # keep-k garbage collection
+    ckpts = sorted(p for p in directory.glob("step_*") if not p.name.endswith(".tmp"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*") if not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``tree_like``; reshard onto ``shardings``
+    (or the shardings of tree_like's leaves) — elastic across mesh shapes."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    leaves_like, treedef = _flatten(tree_like)
+    sh_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None
+        else [getattr(l, "sharding", None) for l in leaves_like]
+    )
+    assert len(leaves_like) == manifest["n_leaves"], "tree structure changed"
+
+    out = []
+    for i, (meta, like, sh) in enumerate(zip(manifest["leaves"], leaves_like, sh_leaves)):
+        is_bf16 = meta["dtype"] == "bfloat16"
+        np_dtype = np.uint16 if is_bf16 else np.dtype(meta["dtype"])
+        full = np.zeros(meta["shape"], dtype=np_dtype)
+        for shard in meta["shards"]:
+            data = np.load(d / f"leaf_{i:04d}" / shard["file"])
+            idx = tuple(slice(a, b) for a, b in shard["index"]) or ...
+            full[idx] = data
+        if is_bf16:
+            import ml_dtypes
+            full = full.view(ml_dtypes.bfloat16)
+        arr = jax.device_put(full, sh) if sh is not None else jax.numpy.asarray(full)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with the next train steps (one in flight)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        # materialize on host in the caller thread (device buffers may be
+        # donated by the next step), then write in the background.
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(self.directory, step, host_tree, self.keep),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,141 @@
+"""Training loop: prefetching, checkpoint/restart, straggler monitoring,
+SIGTERM-safe emergency save. Works on the host mesh (CPU smoke) and the
+production meshes unchanged — the cell builders own the shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-step EWMA + outlier detection.
+
+    On a real multi-host deployment each host reports its step time through
+    the data plane; hosts flagged here get their data shards reassigned by the
+    elastic controller (launch/train.py wires `on_straggler`). In this
+    container it monitors the single process and records the decisions.
+    """
+
+    ewma: float = 0.0
+    alpha: float = 0.1
+    threshold: float = 2.0
+    window: deque = dataclasses.field(default_factory=lambda: deque(maxlen=50))
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.window.append(dt)
+        if self.ewma == 0.0:
+            self.ewma = dt
+        slow = dt > self.threshold * self.ewma and len(self.window) > 5
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        if slow:
+            self.flagged.append((step, dt, self.ewma))
+        return slow
+
+
+class Prefetcher:
+    """One-batch-ahead host→device pipeline (double buffering)."""
+
+    def __init__(self, it: Iterator, put: Callable[[Any], Any]):
+        self.it = it
+        self.put = put
+        self._next = None
+        self._prime()
+
+    def _prime(self):
+        try:
+            self._next = self.put(next(self.it))
+        except StopIteration:
+            self._next = None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._next is None:
+            raise StopIteration
+        out = self._next
+        self._prime()
+        return out
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+
+
+def train_loop(
+    step_fn: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+    params: Any,
+    opt_state: Any,
+    batches: Iterator,
+    cfg: TrainerConfig,
+    log: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """Run ``total_steps``; resume from the latest checkpoint if present."""
+    start_step = 0
+    ckpt = AsyncCheckpointer(cfg.ckpt_dir, cfg.keep) if cfg.ckpt_dir else None
+    if cfg.ckpt_dir and latest_step(cfg.ckpt_dir) is not None:
+        start_step = latest_step(cfg.ckpt_dir)
+        params, opt_state = restore_checkpoint(cfg.ckpt_dir, (params, opt_state))
+        log(f"resumed from step {start_step}")
+
+    # SIGTERM → emergency checkpoint before exiting (preemption safety).
+    interrupted = {"flag": False}
+
+    def _on_term(signum, frame):
+        interrupted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _on_term)
+
+    monitor = StragglerMonitor()
+    losses = []
+    step = start_step
+    try:
+        for step in range(start_step, cfg.total_steps):
+            try:
+                batch = next(batches)
+            except StopIteration:
+                break
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            slow = monitor.observe(step, dt)
+            losses.append(float(metrics["loss"]))
+            if step % cfg.log_every == 0:
+                log(f"step {step:5d} loss {losses[-1]:.4f} {dt*1e3:.0f}ms"
+                    + (" [straggler]" if slow else ""))
+            if ckpt and (step + 1) % cfg.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state))
+            if interrupted["flag"]:
+                log(f"SIGTERM at step {step}: emergency checkpoint")
+                if ckpt:
+                    ckpt.save(step + 1, (params, opt_state))
+                break
+    finally:
+        if ckpt:
+            ckpt.wait()
+        signal.signal(signal.SIGTERM, old_handler)
+
+    return {
+        "params": params,
+        "opt_state": opt_state,
+        "losses": losses,
+        "last_step": step,
+        "stragglers": monitor.flagged,
+    }
