@@ -36,10 +36,10 @@ STRATEGIES = ("random", "dist_ratings", "coresets", "coresets_random", "populari
 
 def _eval_landmark(data, tr, te, spec: LandmarkSpec, key=0):
     m = data.to_matrix(tr)
-    fit(jax.random.PRNGKey(key), m, spec).sims.block_until_ready()  # warm jit
+    jax.block_until_ready(fit(jax.random.PRNGKey(key), m, spec))  # warm jit
     t0 = time.perf_counter()
     st = fit(jax.random.PRNGKey(key), m, spec)
-    st.sims.block_until_ready()
+    jax.block_until_ready(st)
     t_fit = time.perf_counter() - t0
     t0 = time.perf_counter()
     preds = predict(st, jnp.asarray(data.users[te]), jnp.asarray(data.items[te]), spec)
@@ -161,6 +161,47 @@ def tab15_comparative(dataset="movielens100k", epochs=15) -> List[Dict]:
     dt = time.perf_counter() - t0
     rows.append({"algo": "BPMF", "mae": mae(np.asarray(preds), data.ratings[te]),
                  "time_s": dt, "rel": dt / t_lm})
+    return rows
+
+
+def graph_vs_dense_fit_bench(n_users=8192, n_items=512, n_lm=32, iters=2) -> List[Dict]:
+    """Beyond-paper: the O(U²)→O(U·k) fit-artifact win of the NeighborGraph
+    refactor, tracked per-commit in BENCH_*.json. Compares the dense-d2 fit
+    (``dense_sims=True`` escape hatch) against the default graph fit on the
+    same synthetic block: wall time + fitted-artifact bytes (+ XLA's peak
+    temp-memory estimate where the backend reports one)."""
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 6, (n_users, n_items)).astype(np.float32)
+    r *= rng.random((n_users, n_items)) < 0.05
+    from repro.core import RatingMatrix
+
+    m = RatingMatrix(jnp.asarray(r), n_users, n_items)
+    spec = LandmarkSpec(n_landmarks=n_lm, selection="popularity")
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for variant, dense in (("dense_d2", True), ("graph", False)):
+        fn = lambda: fit(key, m, spec, dense_sims=dense)
+        jax.block_until_ready(fn())  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            st = fn()
+        jax.block_until_ready(st)
+        dt = (time.perf_counter() - t0) / iters
+        if dense:
+            artifact = int(st.sims.nbytes)
+        else:
+            artifact = int(st.graph.indices.nbytes + st.graph.weights.nbytes)
+        peak = None
+        try:  # XLA estimate: transients + fitted output for the jitted fit
+            mem = jax.jit(
+                lambda k_, r_: fit(k_, RatingMatrix(r_, n_users, n_items),
+                                   spec, dense_sims=dense)
+            ).lower(key, m.ratings).compile().memory_analysis()
+            peak = int(mem.temp_size_in_bytes) + int(mem.output_size_in_bytes)
+        except Exception:  # memory_analysis availability varies by backend
+            pass
+        rows.append({"variant": variant, "fit_s": dt,
+                     "artifact_bytes": artifact, "peak_bytes": peak})
     return rows
 
 

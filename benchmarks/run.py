@@ -83,6 +83,20 @@ def main(argv=None) -> None:
     for r in paper_tables.kernel_fusion_bench():
         _emit(f"kernel_fusion[{r['variant']}]", r["us_per_call"], "")
 
+    # Beyond-paper: O(U²) dense-d2 fit vs O(U·k) NeighborGraph fit
+    rows = paper_tables.graph_vs_dense_fit_bench()
+    by = {r["variant"]: r for r in rows}
+    d, g = by["dense_d2"], by["graph"]
+    mem_ratio = d["artifact_bytes"] / max(g["artifact_bytes"], 1)
+    peak = ""
+    if d["peak_bytes"] and g["peak_bytes"]:
+        peak = f";peak_ratio={d['peak_bytes'] / max(g['peak_bytes'], 1):.1f}x"
+    _emit("graph_vs_dense_fit[u=8192]", g["fit_s"] * 1e6,
+          f"dense_fit_s={d['fit_s']:.3f};graph_fit_s={g['fit_s']:.3f};"
+          f"dense_artifact_mb={d['artifact_bytes'] / 2**20:.1f};"
+          f"graph_artifact_mb={g['artifact_bytes'] / 2**20:.1f};"
+          f"artifact_ratio={mem_ratio:.0f}x{peak}")
+
     # Roofline rows from the dry-run artifacts, if present
     for tag in ("singlepod", "multipod"):
         path = Path(f"exp/dryrun_{tag}.json")

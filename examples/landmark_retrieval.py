@@ -9,11 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph import build_neighbor_graph
 from repro.core.similarity import (
     blocked_masked_similarity,
     dense_similarity,
     masked_similarity,
-    streaming_knn_graph,
 )
 from repro.models.layers import landmark_attention
 
@@ -65,12 +65,15 @@ print(f"item-item retrieval: full {t_full:.2f}s vs landmark {t_lm:.2f}s "
       f"neighbor quality {quality:.2f} (landmark neighbors' true-similarity mass "
       f"vs optimal)")
 
-# streaming kNN graph (the pod-scale path — no (I, I) matrix)
-vals, idx = jax.jit(
-    lambda r: streaming_knn_graph(r, "cosine", k=10, chunk=512)
+# NeighborGraph via the streaming backend (the pod-scale path — no (I, I)
+# matrix; backend="pallas" fuses sims+top-k in VMEM on TPU)
+graph = jax.jit(
+    lambda r: build_neighbor_graph(r, "cosine", k=10, backend="streaming",
+                                   chunk=512)
 )(rep)
-print(f"streaming kNN graph: {idx.shape} neighbor table, "
-      f"no {n_items}x{n_items} similarity matrix materialized")
+print(f"NeighborGraph: {graph.indices.shape} neighbor table "
+      f"(indices + weights), no {n_items}x{n_items} similarity matrix "
+      f"materialized")
 
 # --- 2. the same reduction on attention (tokens ≙ users) -------------------
 b, s, h, d = 1, 2048, 4, 64

@@ -39,3 +39,6 @@ print(f"Full kNN CF   : MAE {mae(np.asarray(preds_b), data.ratings[test_idx]):.4
       f"  ({t_base:.2f}s)")
 print(f"landmark representation: {state.representation.shape} "
       f"(vs {matrix.shape} ratings) — {spec.n_landmarks} landmarks")
+print(f"fitted artifact: NeighborGraph {state.graph.indices.shape} "
+      f"(indices+weights, O(U·k)) — the dense "
+      f"({matrix.shape[0]}, {matrix.shape[0]}) similarity matrix is never built")

@@ -1,5 +1,5 @@
 """Paper core: landmark-accelerated memory-based collaborative filtering."""
-from .types import LandmarkSpec, RatingMatrix, pad_to, round_up
+from .types import LandmarkSpec, NeighborGraph, RatingMatrix, pad_to, round_up
 from .similarity import (
     MEASURES,
     corated_moments,
@@ -7,8 +7,11 @@ from .similarity import (
     full_similarity_matrix,
     masked_similarity,
     similarity_from_distance,
+    streaming_knn_graph,
+    streaming_knn_graph_sharded,
 )
 from .selection import STRATEGIES, select_landmarks
+from .graph import BACKENDS, build_neighbor_graph
 from . import knn
 from .landmark_cf import (
     LandmarkState,
@@ -22,16 +25,21 @@ from .landmark_cf import (
 
 __all__ = [
     "LandmarkSpec",
+    "NeighborGraph",
     "RatingMatrix",
     "LandmarkState",
     "MEASURES",
     "STRATEGIES",
+    "BACKENDS",
     "corated_moments",
     "dense_similarity",
     "full_similarity_matrix",
     "masked_similarity",
     "similarity_from_distance",
+    "streaming_knn_graph",
+    "streaming_knn_graph_sharded",
     "select_landmarks",
+    "build_neighbor_graph",
     "build_representation",
     "fit",
     "fit_baseline",

@@ -1,0 +1,113 @@
+"""Neighbor-graph construction — the d2/kNN step without the (U, U) matrix.
+
+The fitted artifact of landmark CF is a :class:`~repro.core.types.NeighborGraph`
+— per-user top-k neighbor ids + similarity weights, O(U·k) memory. This module
+is the single place that turns a (U, n) landmark representation into that
+graph, with three selectable backends:
+
+==========  =====================  ============================================
+backend     peak memory            when to pick it
+==========  =====================  ============================================
+dense       O(U²)                  small U / paper-table parity: materializes
+                                   the full d2 matrix then top-k's it. Exact
+                                   tie-breaking match with the dense oracle.
+streaming   O(U·chunk)             default everywhere: scans candidate chunks
+                                   carrying a running (U, k) best-list; works
+                                   for every d2 measure and sharded reps.
+pallas      O(U·k) HBM             TPU + cosine d2: the fused sims+top-k
+                                   kernel — sims tiles never leave VMEM
+                                   (kernels/knn_topk.py).
+==========  =====================  ============================================
+
+``auto`` resolves to ``pallas`` on TPU when d2 is cosine, else ``streaming``.
+All backends exclude self and store weight 0 for empty/invalid slots, so
+downstream Eq. (1) prediction (core.knn) is backend-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .similarity import EPS, dense_similarity, streaming_knn_graph
+from .types import NeighborGraph
+
+BACKENDS = ("dense", "streaming", "pallas", "auto")
+
+
+def resolve_backend(backend: str, measure: str) -> str:
+    if backend == "auto":
+        if measure == "cosine" and jax.default_backend() == "tpu":
+            return "pallas"
+        return "streaming"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown graph backend {backend!r}; expected {BACKENDS}")
+    return backend
+
+
+def finalize_topk(vals: jax.Array, idx: jax.Array) -> NeighborGraph:
+    """Streaming top-k output -> graph: empty (-inf) slots become weight 0."""
+    ok = jnp.isfinite(vals)
+    return NeighborGraph(
+        jnp.where(ok, idx, 0).astype(jnp.int32),
+        jnp.where(ok, vals, 0.0).astype(jnp.float32),
+    )
+
+
+def filter_self_from_topk(vals: jax.Array, idx: jax.Array, row_ids: jax.Array,
+                          k: int) -> Tuple[jax.Array, jax.Array]:
+    """Drop each row's own id from an inclusive (U, k+1) top-k list.
+
+    For sharded kernel outputs where in-kernel self-exclusion would need the
+    shard's global row offset: mask slots whose id equals the row id, then
+    re-top-k down to ``k``.
+    """
+    vals = jnp.where(idx == row_ids[:, None], -jnp.inf, vals)
+    v, sel = jax.lax.top_k(vals, k)
+    return v, jnp.take_along_axis(idx, sel, axis=1)
+
+
+def build_neighbor_graph(
+    rep: jax.Array,  # (U, n) landmark-space representation
+    measure: str = "cosine",
+    k: int = 13,
+    backend: str = "auto",
+    *,
+    chunk: int = 4096,
+    block: Tuple[int, int] = (128, 512),
+    interpret: Optional[bool] = None,
+) -> NeighborGraph:
+    """Top-k neighbor graph over ``rep`` rows under d2 ``measure``.
+
+    Self is always excluded. ``k`` is clamped to U-1 (a row cannot have more
+    distinct neighbors than other rows). See the module docstring for the
+    backend matrix.
+    """
+    u = rep.shape[0]
+    k = max(1, min(k, u - 1)) if u > 1 else 1
+    backend = resolve_backend(backend, measure)
+
+    if backend == "dense":
+        return NeighborGraph.from_dense_sims(
+            dense_similarity(rep, rep, measure), k, exclude_self=True)
+
+    if backend == "streaming":
+        vals, idx = streaming_knn_graph(rep, measure, k=k, chunk=chunk,
+                                        exclude_self=True)
+        return finalize_topk(vals, idx)
+
+    # pallas: fused MXU sims + VMEM-resident top-k; cosine only (the kernel
+    # computes raw dot products over L2-normalized rows).
+    if measure != "cosine":
+        raise ValueError(
+            f"pallas graph backend supports cosine d2 only, got {measure!r}; "
+            "use backend='streaming' for pearson/euclidean")
+    from repro.kernels.knn_topk import topk_sim_kernel
+
+    norm = jnp.sqrt(jnp.sum(rep * rep, axis=-1, keepdims=True))
+    repn = (rep / jnp.maximum(norm, EPS)).astype(jnp.float32)
+    vals, idx = topk_sim_kernel(repn, repn, k=k, block=block,
+                                interpret=interpret, exclude_self=True,
+                                n_valid=u)
+    return finalize_topk(vals, idx)

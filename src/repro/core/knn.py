@@ -6,6 +6,17 @@ Neighborhoods are the k most similar users (k=13 in the paper's comparisons);
 neighbors that did not rate the target item contribute nothing (their mask
 zeroes both numerator and denominator terms). Batched over users with
 ``lax.map`` so the gathered (block, k, P) tensor stays VMEM-sized.
+
+Two entry points per prediction shape:
+
+- ``predict_all`` / ``predict_pairs`` take a dense (U, U) ``sims`` matrix and
+  run top-k inline — the paper-table oracle path (O(U²) memory upstream).
+- ``predict_all_graph`` / ``predict_pairs_graph`` take a fitted
+  :class:`~repro.core.types.NeighborGraph` — the default O(U·k) path. Both
+  share the same Eq. (1) epilogue: self-exclusion and <2-co-rated zeroing are
+  already baked into the graph weights (weight 0 contributes nothing), and
+  mean-centering is identical, so a graph built from ``sims`` by top-k
+  reproduces the oracle bit-for-bit.
 """
 from __future__ import annotations
 
@@ -13,6 +24,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from .types import NeighborGraph
 
 EPS = 1e-8
 
@@ -25,6 +38,23 @@ def _topk_neighbors(sim_row: jax.Array, self_idx: jax.Array, k: int):
     return idx, vals
 
 
+def _center(ratings: jax.Array):
+    """(mask, per-user means, mean-centered ratings) for Eq. (1)."""
+    mask = (ratings != 0).astype(ratings.dtype)
+    cnt = mask.sum(axis=1)
+    means = jnp.where(cnt > 0, ratings.sum(axis=1) / jnp.maximum(cnt, 1.0), 0.0)
+    return mask, means, (ratings - means[:, None]) * mask
+
+
+def _block_predict(idx, w, centered, mask, mu):
+    """Eq. (1) for one user block given its (block, k) neighbor lists."""
+    nb_centered = centered[idx]  # gathers: (block, k, P)
+    nb_mask = mask[idx]
+    num = jnp.einsum("bk,bkp->bp", w, nb_centered)
+    den = jnp.einsum("bk,bkp->bp", jnp.abs(w), nb_mask)
+    return mu[:, None] + num / jnp.maximum(den, EPS)
+
+
 @partial(jax.jit, static_argnames=("k", "block"))
 def predict_all(
     sims: jax.Array,  # (U, U) user-user similarity
@@ -34,10 +64,7 @@ def predict_all(
 ) -> jax.Array:
     """Predict the full (U, P) matrix with the kNN rule. Returns r̂ for all cells."""
     n_users = ratings.shape[0]
-    mask = (ratings != 0).astype(ratings.dtype)
-    cnt = mask.sum(axis=1)
-    means = jnp.where(cnt > 0, ratings.sum(axis=1) / jnp.maximum(cnt, 1.0), 0.0)
-    centered = (ratings - means[:, None]) * mask  # (U, P)
+    mask, means, centered = _center(ratings)
 
     n_blocks = -(-n_users // block)
     pad = n_blocks * block - n_users
@@ -49,17 +76,47 @@ def predict_all(
         rows = jax.lax.dynamic_slice_in_dim(sims_p, b * block, block, axis=0)
         ids = jax.lax.dynamic_slice_in_dim(user_ids, b * block, block)
         idx, w = jax.vmap(_topk_neighbors, in_axes=(0, 0, None))(rows, ids, k)
-        # gathers: (block, k, P)
-        nb_centered = centered[idx]
-        nb_mask = mask[idx]
-        num = jnp.einsum("bk,bkp->bp", w, nb_centered)
-        den = jnp.einsum("bk,bkp->bp", jnp.abs(w), nb_mask)
         mu = jax.lax.dynamic_slice_in_dim(means_p, b * block, block)
-        return mu[:, None] + num / jnp.maximum(den, EPS)
+        return _block_predict(idx, w, centered, mask, mu)
 
     preds = jax.lax.map(one_block, jnp.arange(n_blocks))
     preds = preds.reshape(n_blocks * block, -1)[:n_users]
     return preds
+
+
+@partial(jax.jit, static_argnames=("block",))
+def predict_all_graph(
+    graph: NeighborGraph,  # (U, k) fitted neighbor lists
+    ratings: jax.Array,  # (U, P), 0 == missing
+    block: int = 256,
+) -> jax.Array:
+    """``predict_all`` from a NeighborGraph — no (U, U) array anywhere."""
+    n_users = ratings.shape[0]
+    mask, means, centered = _center(ratings)
+
+    n_blocks = -(-n_users // block)
+    pad = n_blocks * block - n_users
+    idx_p = jnp.pad(graph.indices, ((0, pad), (0, 0)))
+    w_p = jnp.pad(graph.weights, ((0, pad), (0, 0)))
+    means_p = jnp.pad(means, (0, pad))
+
+    def one_block(b):
+        idx = jax.lax.dynamic_slice_in_dim(idx_p, b * block, block, axis=0)
+        w = jax.lax.dynamic_slice_in_dim(w_p, b * block, block, axis=0)
+        mu = jax.lax.dynamic_slice_in_dim(means_p, b * block, block)
+        return _block_predict(idx, w, centered, mask, mu)
+
+    preds = jax.lax.map(one_block, jnp.arange(n_blocks))
+    preds = preds.reshape(n_blocks * block, -1)[:n_users]
+    return preds
+
+
+def _pair_predict(idx, w, u, v, ratings, mask, means):
+    r = ratings[idx, v]
+    m = mask[idx, v]
+    num = jnp.sum(w * (r - means[idx]) * m)
+    den = jnp.sum(jnp.abs(w) * m)
+    return means[u] + num / jnp.maximum(den, EPS)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -71,16 +128,27 @@ def predict_pairs(
     k: int = 13,
 ) -> jax.Array:
     """Predict only the requested (user, item) pairs — the test-fold path."""
-    mask = (ratings != 0).astype(ratings.dtype)
-    cnt = mask.sum(axis=1)
-    means = jnp.where(cnt > 0, ratings.sum(axis=1) / jnp.maximum(cnt, 1.0), 0.0)
+    mask, means, _ = _center(ratings)
 
     def one(u, v):
         idx, w = _topk_neighbors(sims[u], u, k)
-        r = ratings[idx, v]
-        m = mask[idx, v]
-        num = jnp.sum(w * (r - means[idx]) * m)
-        den = jnp.sum(jnp.abs(w) * m)
-        return means[u] + num / jnp.maximum(den, EPS)
+        return _pair_predict(idx, w, u, v, ratings, mask, means)
+
+    return jax.vmap(one)(users, items)
+
+
+@jax.jit
+def predict_pairs_graph(
+    graph: NeighborGraph,
+    ratings: jax.Array,
+    users: jax.Array,  # (B,) query user ids
+    items: jax.Array,  # (B,) query item ids
+) -> jax.Array:
+    """``predict_pairs`` from a NeighborGraph — no (U, U) array anywhere."""
+    mask, means, _ = _center(ratings)
+
+    def one(u, v):
+        return _pair_predict(graph.indices[u], graph.weights[u], u, v,
+                             ratings, mask, means)
 
     return jax.vmap(one)(users, items)

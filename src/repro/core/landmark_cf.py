@@ -4,15 +4,20 @@ Pipeline (user-based; item-based transposes the rating matrix first):
 
   1. ``select_landmarks``            — one of the five strategies (§3.3)
   2. ``d1 = masked_similarity``      — (U, n) user-landmark representation
-  3. ``d2 = dense_similarity``       — (U, U) similarity in landmark space
-  4. ``knn.predict_*``               — Eq. (1) rating prediction
+  3. ``graph.build_neighbor_graph``  — (U, k) top-k NeighborGraph in landmark
+                                       space (d2); the (U, U) matrix never
+                                       touches HBM on this default path
+  4. ``knn.predict_*_graph``         — Eq. (1) rating prediction
 
-Complexity: O(|U|·n·|P|) + O(|U|²·n) instead of O(|U|²·|P|).
+Complexity: O(|U|·n·|P|) compute + O(|U|·(n+k)) fit memory instead of
+O(|U|²·|P|) / O(|U|²). ``fit(..., dense_sims=True)`` is the escape hatch that
+keeps the dense (U, U) d2 matrix for paper-table parity and oracle tests.
 
 ``fit_distributed`` is the pod-scale variant (DESIGN.md §3): users sharded over
 the ('pod','data') mesh axes, landmarks replicated. The only cross-shard
 payload is the (U, n) landmark representation — a |P|/n reduction in collective
-bytes versus sharded full-matrix CF.
+bytes versus sharded full-matrix CF — and the graph build all-gathers one
+candidate chunk at a time (streaming_knn_graph_sharded).
 """
 from __future__ import annotations
 
@@ -25,28 +30,36 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import knn
+from .graph import build_neighbor_graph, finalize_topk
 from .selection import select_landmarks
 from .similarity import (
     dense_similarity,
     full_similarity_matrix,
     masked_similarity,
-    similarity_from_distance,
+    streaming_knn_graph_sharded,
 )
-from .types import LandmarkSpec, RatingMatrix
+from .types import LandmarkSpec, NeighborGraph, RatingMatrix
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class LandmarkState:
-    """Fitted state: landmark ids, reduced representation, user-user sims."""
+    """Fitted state: landmark ids, reduced representation, neighbor graph.
+
+    Exactly one of ``graph`` (default O(U·k) artifact) and ``sims`` (the dense
+    (U, U) escape hatch: ``fit(..., dense_sims=True)`` / ``fit_baseline``) is
+    set; prediction dispatches on which one is present.
+    """
 
     landmark_idx: jax.Array  # (n,)
     representation: jax.Array  # (U, n) users in landmark space
-    sims: jax.Array  # (U, U) similarity in landmark space
     ratings: jax.Array  # (U, P) the (possibly transposed) training block
+    graph: Optional[NeighborGraph] = None  # (U, k) neighbor ids + weights
+    sims: Optional[jax.Array] = None  # (U, U) dense escape hatch
 
     def tree_flatten(self):
-        return (self.landmark_idx, self.representation, self.sims, self.ratings), ()
+        return (self.landmark_idx, self.representation, self.ratings,
+                self.graph, self.sims), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -77,24 +90,42 @@ def fit(
     matrix: RatingMatrix,
     spec: LandmarkSpec,
     sim_fn=None,
+    *,
+    dense_sims: bool = False,
+    backend: Optional[str] = None,
 ) -> LandmarkState:
-    """Fit landmark CF on a single host/device (the paper-scale path)."""
+    """Fit landmark CF on a single host/device (the paper-scale path).
+
+    Default: the fitted artifact is a (U, k) NeighborGraph built by
+    ``core.graph`` (backend from ``spec.graph_backend`` unless overridden) —
+    the (U, U) d2 matrix is never materialized. ``dense_sims=True`` keeps the
+    dense matrix instead (paper-table parity / oracle comparisons).
+    """
     r = _oriented(matrix.ratings, spec.mode)
     idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
     rep = build_representation(r, idx, spec.d1, sim_fn)
-    sims = dense_similarity(rep, rep, spec.d2)
-    return LandmarkState(idx, rep, sims, r)
+    if dense_sims:
+        sims = dense_similarity(rep, rep, spec.d2)
+        return LandmarkState(idx, rep, r, sims=sims)
+    graph = build_neighbor_graph(rep, spec.d2, spec.k_neighbors,
+                                 backend=backend or spec.graph_backend)
+    return LandmarkState(idx, rep, r, graph=graph)
 
 
 def predict(state: LandmarkState, users: jax.Array, items: jax.Array, spec: LandmarkSpec):
     """Predict the requested (row, col) cells of the oriented matrix."""
     if spec.mode == "item":
         users, items = items, users
+    if state.graph is not None:
+        return knn.predict_pairs_graph(state.graph, state.ratings, users, items)
     return knn.predict_pairs(state.sims, state.ratings, users, items, k=spec.k_neighbors)
 
 
 def predict_dense(state: LandmarkState, spec: LandmarkSpec) -> jax.Array:
-    preds = knn.predict_all(state.sims, state.ratings, k=spec.k_neighbors)
+    if state.graph is not None:
+        preds = knn.predict_all_graph(state.graph, state.ratings)
+    else:
+        preds = knn.predict_all(state.sims, state.ratings, k=spec.k_neighbors)
     return preds.T if spec.mode == "item" else preds
 
 
@@ -104,9 +135,14 @@ def predict_dense(state: LandmarkState, spec: LandmarkSpec) -> jax.Array:
 
 
 def fit_baseline(matrix: RatingMatrix, measure: str, mode: str = "user") -> LandmarkState:
+    """Full-matrix kNN: the O(|U|²·|P|) cost the landmark method removes.
+
+    Keeps the dense sims matrix by construction — it IS the baseline artifact.
+    """
     r = _oriented(matrix.ratings, mode)
     sims = full_similarity_matrix(r, measure)
-    return LandmarkState(jnp.zeros((0,), jnp.int32), jnp.zeros((r.shape[0], 0)), sims, r)
+    return LandmarkState(jnp.zeros((0,), jnp.int32), jnp.zeros((r.shape[0], 0)),
+                         r, sims=sims)
 
 
 # ---------------------------------------------------------------------------
@@ -120,28 +156,62 @@ def fit_distributed(
     spec: LandmarkSpec,
     mesh: jax.sharding.Mesh,
     user_axes=("pod", "data"),
+    *,
+    dense_sims: bool = False,
+    chunk_local: int = 512,
 ) -> LandmarkState:
-    """Landmark CF under pjit: the d2 matrix is computed from the (U, n)
-    representation only; GSPMD inserts a single all-gather of (U, n) instead of
-    the (U, P) rating exchange the full-matrix baseline would need.
+    """Landmark CF under pjit/shard_map: the d2 step consumes the (U, n)
+    representation only, so the sole cross-shard payload is (U, n) — not the
+    (U, P) rating exchange the full-matrix baseline would need. The default
+    graph build streams candidate chunks (one all-gather of
+    chunk_local × n_shards rows per step); fit memory is O(U·(n+k)) per shard
+    group instead of O(U²).
     """
     axes = tuple(a for a in user_axes if a in mesh.axis_names)
     user_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
     rep_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
-    sims_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
+
+    if dense_sims:  # escape hatch: replicate the old O(U²) artifact
+        sims_sharding = jax.sharding.NamedSharding(mesh, P(axes, None))
+
+        @partial(
+            jax.jit,
+            in_shardings=(None, user_sharding),
+            out_shardings=(None, rep_sharding, sims_sharding),
+        )
+        def _fit(key, r):
+            idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
+            landmarks = r[idx]  # gather -> replicated (n, P)
+            rep = masked_similarity(r, landmarks, spec.d1)  # local GEMMs
+            sims = dense_similarity(rep, rep, spec.d2)  # all-gather of (U, n) only
+            return idx, rep, sims
+
+        idx, rep, sims = _fit(key, ratings)
+        return LandmarkState(idx, rep, ratings, sims=sims)
+
+    import numpy as np
+
+    n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    u = ratings.shape[0]
+    assert u % n_shards == 0, (u, n_shards)  # shard_map row-partition contract
+    k = max(1, min(spec.k_neighbors, u - 1))
 
     @partial(
         jax.jit,
         in_shardings=(None, user_sharding),
-        out_shardings=(None, rep_sharding, sims_sharding),
-        static_argnums=(),
+        out_shardings=(None, rep_sharding),
     )
-    def _fit(key, r):
+    def _rep(key, r):
         idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
         landmarks = r[idx]  # gather -> replicated (n, P)
-        rep = masked_similarity(r, landmarks, spec.d1)  # local GEMMs
-        sims = dense_similarity(rep, rep, spec.d2)  # all-gather of (U, n) only
-        return idx, rep, sims
+        return idx, masked_similarity(r, landmarks, spec.d1)  # local GEMMs
 
-    idx, rep, sims = _fit(key, ratings)
-    return LandmarkState(idx, rep, sims, ratings)
+    idx, rep = _rep(key, ratings)
+    with mesh:
+        vals, nbrs = jax.jit(
+            lambda rp: streaming_knn_graph_sharded(
+                rp, mesh, spec.d2, k=k, chunk_local=chunk_local, row_axes=axes,
+                exclude_self=True)
+        )(rep)
+        graph = jax.jit(finalize_topk)(vals, nbrs)
+    return LandmarkState(idx, rep, ratings, graph=graph)

@@ -91,7 +91,19 @@ def coresets_landmarks(
     picked0 = jnp.zeros((rounds * per_round,), dtype=jnp.int32)
     keys = jax.random.split(key, rounds)
     (alive, picked, n_picked), _ = jax.lax.scan(body, (alive0, picked0, 0), keys)
-    return picked[:n]
+    # The per-round sampler can re-pick an already-dropped user (the 1e-9
+    # probability floor keeps dead users sampleable once the alive pool runs
+    # short), so ``picked`` may contain duplicates. Guarantee n DISTINCT valid
+    # indices: score every user — picks get a bonus decreasing in pick order
+    # (so the first n unique picks win, preserving the old behaviour when
+    # there were no duplicates), everyone else their normalized rating count —
+    # and take the global top-n, which is distinct by construction. scatter-max
+    # keeps a duplicated user's score deterministic (max == earliest pick).
+    size = picked.shape[0]
+    fallback = counts / (counts.max() + 2.0)  # in [0, 1): below any pick bonus
+    scores = fallback.at[picked].max(jnp.arange(size, 0.0, -1.0))
+    _, out = jax.lax.top_k(scores, n)
+    return out.astype(jnp.int32)
 
 
 def select_landmarks(key: jax.Array, ratings: jax.Array, n: int, strategy: str) -> jax.Array:

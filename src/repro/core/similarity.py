@@ -23,6 +23,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 EPS = 1e-8
 MEASURES = ("cosine", "pearson", "euclidean")
@@ -151,23 +152,36 @@ def blocked_masked_similarity(
 
 def streaming_knn_graph(  # callers jit this; ``rules`` stays a static python dict
     rep: jax.Array, measure: str = "cosine", k: int = 14, chunk: int = 8192,
-    rules=None,
+    rules=None, exclude_self: bool = False,
 ):
     """kNN graph over the landmark representation without the (U, U) matrix:
     scan candidate chunks carrying a running (U, k) top-k. Row-sharded ``rep``
     stays sharded; per-chunk candidate rows (chunk, n) are gathered (tiny).
     The carry is explicitly row-sharded — an unconstrained scan carry would be
-    resolved replicated and drag the whole (U, chunk) sims buffer with it."""
+    resolved replicated and drag the whole (U, chunk) sims buffer with it.
+
+    U that is not a multiple of ``chunk`` is handled by padding the candidate
+    side (padded columns are masked to -inf, so no row is ever counted twice);
+    ``exclude_self`` masks the diagonal so row u never lists itself."""
     from repro.distributed.sharding import constrain
 
     u, n = rep.shape
+    chunk = max(min(chunk, u), min(k, u))
     n_chunks = -(-u // chunk)
+    pad = n_chunks * chunk - u
+    cand_src = jnp.pad(rep, ((0, pad), (0, 0))) if pad else rep
+    row_ids = jnp.arange(u)
     pin = lambda x: constrain(x, ("batch", "null"), rules) if rules else x
 
     def body(carry, c_idx):
         best_v, best_i = carry
-        cand = jax.lax.dynamic_slice_in_dim(rep, c_idx * chunk, chunk, axis=0)
+        cand = jax.lax.dynamic_slice_in_dim(cand_src, c_idx * chunk, chunk, axis=0)
         sims = pin(dense_similarity(rep, cand, measure))  # (U, chunk) row-sharded
+        cand_ids = c_idx * chunk + jnp.arange(chunk)
+        invalid = (cand_ids >= u)[None, :]
+        if exclude_self:
+            invalid = invalid | (cand_ids[None, :] == row_ids[:, None])
+        sims = jnp.where(invalid, -jnp.inf, sims)
         v, i = jax.lax.top_k(sims, k)
         i = i + c_idx * chunk
         mv = jnp.concatenate([best_v, v], axis=1)
@@ -184,33 +198,57 @@ def streaming_knn_graph(  # callers jit this; ``rules`` stays a static python di
 def streaming_knn_graph_sharded(
     rep: jax.Array, mesh, measure: str = "cosine", k: int = 14,
     chunk_local: int = 512, row_axes=("pod", "data"),
+    exclude_self: bool = False,
 ):
     """shard_map variant: rows stay local per shard, candidate chunks are
     all-gathered one at a time (chunk_local × n_shards rows per step). No
-    GSPMD decisions — top_k is shard-local by construction."""
+    GSPMD decisions — top_k is shard-local by construction.
+
+    Global candidate ids: a tiled all_gather over ``axes`` concatenates the
+    per-shard chunks in mesh-linearized shard order, so gathered column j is
+    local row ``c_idx * chunk_local + j % chunk_local`` of shard
+    ``j // chunk_local`` — whose global row id is ``shard * u_local + local``
+    (rows are block-partitioned over the same linearization). Verified against
+    the unsharded oracle in tests/test_distributed.py, including multi-axis
+    meshes."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(a for a in row_axes if a in mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
 
     def inner(rep_l):
         u_l, n = rep_l.shape
-        n_chunks = u_l // chunk_local
+        # Candidate-side chunking adapts to the local shard: clamp to u_l,
+        # grow so one gathered step holds >= k candidates (top_k needs that),
+        # and pad the candidate source so ragged u_l never double-counts rows
+        # (padded local indices are masked invalid below). Queries stay the
+        # unpadded rep_l, so outputs keep the (u_l, k) shard shape.
+        chunk = max(min(chunk_local, u_l), -(-k // n_shards))
+        n_chunks = -(-u_l // chunk)
+        pad = n_chunks * chunk - u_l
+        cand_src = jnp.pad(rep_l, ((0, pad), (0, 0))) if pad else rep_l
+        shard_lin = jnp.int32(0)
+        for a in axes:
+            shard_lin = shard_lin * mesh.shape[a] + jax.lax.axis_index(a)
+        row_gid = shard_lin * u_l + jnp.arange(u_l)
+        j = jnp.arange(chunk * n_shards)
 
         def body(carry, c_idx):
             best_v, best_i = carry
-            mine = jax.lax.dynamic_slice_in_dim(rep_l, c_idx * chunk_local,
-                                                chunk_local, axis=0)
+            mine = jax.lax.dynamic_slice_in_dim(cand_src, c_idx * chunk,
+                                                chunk, axis=0)
             cand = jax.lax.all_gather(mine, axes, tiled=True)  # (chunk*S, n)
+            within = c_idx * chunk + j % chunk  # local row in the padded space
+            valid = within < u_l
+            cand_gid = (j // chunk) * u_l + within
             sims = dense_similarity(rep_l, cand, measure)
+            invalid = ~valid[None, :]
+            if exclude_self:
+                invalid = invalid | (cand_gid[None, :] == row_gid[:, None])
+            sims = jnp.where(invalid, -jnp.inf, sims)
             v, i = jax.lax.top_k(sims, k)
-            i = i + c_idx * 0  # local chunk ids fixed below
-            # global candidate row id: gather order is axis-major over shards
-            i = i  # indices are into the gathered chunk
-            base = c_idx * chunk_local  # offset within each shard's rows
-            shard_of = i // chunk_local
-            within = i % chunk_local
-            gid = shard_of * u_l + base + within
+            gid = jnp.where(valid, cand_gid, 0)[i]
             mv = jnp.concatenate([best_v, v], axis=1)
             mi = jnp.concatenate([best_i, gid.astype(jnp.int32)], axis=1)
             nv, sel = jax.lax.top_k(mv, k)

@@ -71,6 +71,52 @@ class RatingMatrix:
         return RatingMatrix(jnp.asarray(dense, dtype=dtype), n_users, n_items)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NeighborGraph:
+    """Sparse per-row top-k neighborhood — the consumable CF artifact.
+
+    ``indices[u]`` are the ids of u's k most similar rows (self excluded at
+    construction); ``weights[u]`` the matching similarities, with 0 stored for
+    invalid slots (padding, < 2 co-rated items, rows with fewer than k valid
+    neighbors). O(U·k) memory where the dense similarity matrix is O(U²) —
+    this is what lets fit scale past the (U, U) HBM wall (ROADMAP north star).
+    """
+
+    indices: jax.Array  # (U, k) int32 neighbor row ids
+    weights: jax.Array  # (U, k) float similarity weights; 0 == no contribution
+
+    def tree_flatten(self):
+        return (self.indices, self.weights), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.indices.shape[1]
+
+    @staticmethod
+    def from_dense_sims(sims: jax.Array, k: int, exclude_self: bool = True
+                        ) -> "NeighborGraph":
+        """Top-k reduction of a dense (U, U) similarity matrix.
+
+        Matches knn's per-row top-k semantics exactly: self is masked to -inf
+        before the top-k, and non-finite values become zero weights.
+        """
+        u = sims.shape[0]
+        if exclude_self:
+            sims = jnp.where(jnp.eye(u, dtype=bool), -jnp.inf, sims)
+        vals, idx = jax.lax.top_k(sims, min(k, u))
+        weights = jnp.where(jnp.isfinite(vals), vals, 0.0)
+        return NeighborGraph(idx.astype(jnp.int32), weights)
+
+
 @dataclasses.dataclass(frozen=True)
 class LandmarkSpec:
     """Parameters of the landmark reduction (paper §3)."""
@@ -81,6 +127,7 @@ class LandmarkSpec:
     d2: str = "cosine"  # landmark-space measure (Algorithm 4 family)
     k_neighbors: int = 13  # paper §4.4
     mode: str = "user"  # user|item based CF
+    graph_backend: str = "auto"  # dense|streaming|pallas|auto (core.graph)
 
 
 def pad_to(x: jax.Array, size: int, axis: int = 0) -> jax.Array:

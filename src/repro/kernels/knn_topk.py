@@ -8,19 +8,25 @@ from O(U·C) sims reads+writes to one pass over the candidate rows:
 
   grid = (U/bu, C/bc)  c innermost arbitrary
   VMEM: rep tile (bu, n) + cand tile (bc, n) + best (bu, k) ×2 scratch
+
+The wrapper pads both row axes up to the block multiples (padded candidate
+columns are masked to -inf via ``n_valid``), and ``exclude_self`` masks the
+global diagonal in-kernel — so the kernel can serve cosine d2 graph builds
+directly (core.graph backend="pallas") where rep == cand and row u must not
+pick itself.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc):
+def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc,
+            bu, n_valid, exclude_self):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         best_v[...] = jnp.full_like(best_v, -jnp.inf)
@@ -31,8 +37,14 @@ def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc):
     sims = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)  # (bu, bc)
     base = pl.program_id(1) * bc
-    bu = sims.shape[0]
-    rows = jnp.arange(bu)
+    # global candidate / query row ids for this tile (2D iota: TPU-safe)
+    col_gid = base + jax.lax.broadcasted_iota(jnp.int32, (bu, bc), 1)
+    invalid = col_gid >= n_valid
+    if exclude_self:
+        row_gid = pl.program_id(0) * bu + jax.lax.broadcasted_iota(
+            jnp.int32, (bu, bc), 0)
+        invalid = invalid | (col_gid == row_gid)
+    sims = jnp.where(invalid, -jnp.inf, sims)
 
     bv, bi = best_v[...], best_i[...]
     for _ in range(k):  # k rounds: extract tile max, displace the current min
@@ -64,16 +76,32 @@ def topk_sim_kernel(
     k: int = 14,
     block: Tuple[int, int] = (128, 512),
     interpret: bool = None,
+    exclude_self: bool = False,
+    n_valid: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (vals, idx): for every rep row, top-k candidate dot products.
-    Requires U % bu == 0 and C % bc == 0 (pad outside)."""
+
+    Shapes need not be block multiples — both row axes are zero-padded up to
+    them and padded candidates are masked out (never selected). ``n_valid``
+    restricts selection to the first ``n_valid`` candidate rows (defaults to
+    ``cand.shape[0]``). ``exclude_self`` assumes rep and cand are the *same*
+    row set (rep row i == cand row i) and masks the diagonal; slots that end
+    up empty (e.g. fully masked tiles) come back as -inf values.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     u, n = rep.shape
     c = cand.shape[0]
+    if n_valid is None:
+        n_valid = c
     bu, bc = block
-    assert u % bu == 0 and c % bc == 0, (u, c, block)
-    n_c = c // bc
+    bu, bc = min(bu, -(-u // 8) * 8), min(bc, -(-c // 8) * 8)
+    u_pad, c_pad = -(-u // bu) * bu, -(-c // bc) * bc
+    if u_pad != u:
+        rep = jnp.pad(rep, ((0, u_pad - u), (0, 0)))
+    if c_pad != c:
+        cand = jnp.pad(cand, ((0, c_pad - c), (0, 0)))
+    n_c = c_pad // bc
 
     from jax.experimental.pallas import tpu as pltpu
 
@@ -83,8 +111,9 @@ def topk_sim_kernel(
             dimension_semantics=("parallel", "arbitrary")
         )
     vals, idx = pl.pallas_call(
-        functools.partial(_kernel, k=k, n_c=n_c, bc=bc),
-        grid=(u // bu, n_c),
+        functools.partial(_kernel, k=k, n_c=n_c, bc=bc, bu=bu,
+                          n_valid=n_valid, exclude_self=exclude_self),
+        grid=(u_pad // bu, n_c),
         in_specs=[
             pl.BlockSpec((bu, n), lambda i, j: (i, 0)),
             pl.BlockSpec((bc, n), lambda i, j: (j, 0)),
@@ -94,8 +123,8 @@ def topk_sim_kernel(
             pl.BlockSpec((bu, k), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((u, k), jnp.float32),
-            jax.ShapeDtypeStruct((u, k), jnp.int32),
+            jax.ShapeDtypeStruct((u_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((u_pad, k), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bu, k), jnp.float32),
@@ -104,7 +133,7 @@ def topk_sim_kernel(
         interpret=interpret,
         **kwargs,
     )(rep, cand)
-    return vals, idx
+    return vals[:u], idx[:u]
 
 
 def topk_sim_ref(rep, cand, k=14):

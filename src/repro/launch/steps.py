@@ -17,9 +17,11 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core import graph as core_graph
 from repro.core import knn as core_knn
 from repro.core import selection as core_selection
 from repro.core import similarity as core_similarity
+from repro.core.types import NeighborGraph
 from repro.distributed.sharding import filter_rules, sharding_for, spec_for, tree_shardings
 from repro.models import gnn as gnn_mod
 from repro.models import recsys as rec_mod
@@ -379,59 +381,71 @@ def _cf_cell(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh, variant: str = "bas
 
     if shape.kind == "cf_fit":
         key = _sds((2,), jnp.uint32, mesh, P(None))
-        topk = u > 100_000  # pod-scale: emit kNN graph, not the dense (U,U)
+        podscale = u > 100_000  # shard_map graph build instead of GSPMD
 
         def step(key, r):
+            # Every cf_fit cell emits the O(U·k) NeighborGraph — the (U, U)
+            # similarity matrix never exists in any variant.
             idx = core_selection.select_landmarks(key, r, n_lm, spec.selection)
             landmarks = r[idx]  # replicated (n, P)
-            if topk:
-                # pod-scale: d1 moments contract over the model-sharded item
-                # axis (local partial + psum — tile-sized temporaries; on TPU
-                # the fused Pallas kernel replaces this schedule), then a
-                # streaming top-k kNN graph — the (U, U) matrix never exists.
-                rep = core_similarity.masked_similarity(r, landmarks, spec.d1)
-                if variant == "fused":
-                    # §Perf hillclimb: fused sims+top-k Pallas kernel — the
-                    # (U_loc, chunk) sims tiles never leave VMEM, and the rep
-                    # moves as bf16 (2x wire+HBM).
-                    from jax.experimental.shard_map import shard_map
-                    from jax.sharding import PartitionSpec as PS
-                    from repro.kernels.knn_topk import topk_sim_kernel
-
-                    repn = rep / jnp.maximum(
-                        jnp.linalg.norm(rep, axis=1, keepdims=True), 1e-8
-                    )
-                    repn = repn.astype(jnp.bfloat16)
-                    vals, nbrs = shard_map(
-                        lambda rl, rfull: topk_sim_kernel(
-                            rl, rfull, k=spec.k_neighbors + 1, block=(1024, 512)
-                        ),
-                        mesh=mesh,
-                        in_specs=(PS(baxes, None), PS(None, None)),
-                        out_specs=(PS(baxes, None), PS(baxes, None)),
-                        check_rep=False,
-                    )(repn, repn)
-                else:
-                    vals, nbrs = core_similarity.streaming_knn_graph_sharded(
-                        rep, mesh, spec.d2, k=spec.k_neighbors + 1, chunk_local=512,
-                    )
-                return idx, rep, vals, nbrs
+            # d1 moments contract over the (possibly model-sharded) item axis
+            # (local partial + psum — tile-sized temporaries; on TPU the fused
+            # Pallas kernel replaces this schedule).
             rep = core_similarity.masked_similarity(r, landmarks, spec.d1)
-            sims = core_similarity.dense_similarity(rep, rep, spec.d2)
-            return idx, rep, sims
+            if podscale and variant == "fused":
+                # §Perf hillclimb: fused sims+top-k Pallas kernel — the
+                # (U_loc, chunk) sims tiles never leave VMEM, and the rep
+                # moves as bf16 (2x wire+HBM). Self-exclusion happens outside
+                # the kernel (each shard lacks its global row offset): emit
+                # k+1, mask own ids, re-top-k to k.
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as PS
+                from repro.kernels.knn_topk import topk_sim_kernel
+
+                repn = rep / jnp.maximum(
+                    jnp.linalg.norm(rep, axis=1, keepdims=True), 1e-8
+                )
+                repn = repn.astype(jnp.bfloat16)
+                vals, nbrs = shard_map(
+                    lambda rl, rfull: topk_sim_kernel(
+                        rl, rfull, k=spec.k_neighbors + 1, block=(1024, 512)
+                    ),
+                    mesh=mesh,
+                    in_specs=(PS(baxes, None), PS(None, None)),
+                    out_specs=(PS(baxes, None), PS(baxes, None)),
+                    check_rep=False,
+                )(repn, repn)
+                vals, nbrs = core_graph.filter_self_from_topk(
+                    vals, nbrs, jnp.arange(u), spec.k_neighbors)
+            elif podscale:
+                vals, nbrs = core_similarity.streaming_knn_graph_sharded(
+                    rep, mesh, spec.d2, k=spec.k_neighbors, chunk_local=512,
+                    exclude_self=True,
+                )
+            else:
+                # rules pins the scan carry row-sharded — unconstrained, GSPMD
+                # would replicate the (U, chunk) sims tile on every device.
+                vals, nbrs = core_similarity.streaming_knn_graph(
+                    rep, spec.d2, k=spec.k_neighbors, chunk=min(4096, u),
+                    rules=filter_rules(arch.rules, mesh), exclude_self=True,
+                )
+            graph = core_graph.finalize_topk(vals, nbrs)
+            return idx, rep, graph.weights, graph.indices
 
         return Cell(arch, shape, mesh, step, (key, ratings))
 
-    # cf_predict: kNN Eq.1 over a fitted sims matrix
-    sims = _sds((u, u), jnp.float32, mesh, P(baxes, None))
+    # cf_predict: kNN Eq.1 over the fitted (U, k) NeighborGraph
+    nbr_w = _sds((u, spec.k_neighbors), jnp.float32, mesh, P(baxes, None))
+    nbr_i = _sds((u, spec.k_neighbors), jnp.int32, mesh, P(baxes, None))
     pairs = d["n_pairs"]
     users = _sds((pairs,), jnp.int32, mesh, P(baxes))
     items = _sds((pairs,), jnp.int32, mesh, P(baxes))
 
-    def step(sims, r, users, items):
-        return core_knn.predict_pairs(sims, r, users, items, k=spec.k_neighbors)
+    def step(nbr_w, nbr_i, r, users, items):
+        graph = NeighborGraph(nbr_i, nbr_w)
+        return core_knn.predict_pairs_graph(graph, r, users, items)
 
-    return Cell(arch, shape, mesh, step, (sims, ratings, users, items))
+    return Cell(arch, shape, mesh, step, (nbr_w, nbr_i, ratings, users, items))
 
 
 # ----------------------------------------------------------------- dispatcher

@@ -91,6 +91,7 @@ def test_selection_strategies_return_n_valid_indices(small_ratings, strategy):
     idx = select_landmarks(jax.random.PRNGKey(0), small_ratings, 10, strategy)
     assert idx.shape == (10,)
     assert int(idx.min()) >= 0 and int(idx.max()) < small_ratings.shape[0]
+    assert len(set(np.asarray(idx).tolist())) == 10  # distinct landmarks
 
 
 def test_popularity_picks_highest_count_users(small_ratings):
@@ -133,7 +134,10 @@ def test_item_based_mode_transposes():
     m = data.to_matrix(tr)
     spec = LandmarkSpec(n_landmarks=15, selection="dist_ratings", mode="item")
     st = fit(jax.random.PRNGKey(1), m, spec)
-    assert st.sims.shape == (data.n_items, data.n_items)
+    # default fit emits the O(I·k) graph over ITEMS, not an (I, I) matrix
+    assert st.sims is None
+    assert st.graph.indices.shape == (data.n_items, spec.k_neighbors)
+    assert st.graph.weights.shape == (data.n_items, spec.k_neighbors)
     preds = predict(st, jnp.asarray(data.users[te][:100]),
                     jnp.asarray(data.items[te][:100]), spec)
     assert preds.shape == (100,)

@@ -50,12 +50,39 @@ def test_fit_distributed_matches_local(mesh):
     r *= rng.random((64, 40)) < 0.5
     m = RatingMatrix(jnp.asarray(r), 64, 40)
     spec = LandmarkSpec(n_landmarks=8, selection="popularity")
-    local = fit(jax.random.PRNGKey(0), m, spec)
+    # dense_sims escape hatch: exact (U, U) parity with the local dense fit
+    local = fit(jax.random.PRNGKey(0), m, spec, dense_sims=True)
     dist = fit_distributed(jax.random.PRNGKey(0), m.ratings, spec, mesh,
-                           user_axes=("data",))
+                           user_axes=("data",), dense_sims=True)
     np.testing.assert_allclose(np.asarray(dist.representation),
                                np.asarray(local.representation), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(dist.sims), np.asarray(local.sims),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fit_distributed_graph_matches_local_graph(mesh):
+    """Default fit_distributed emits the sharded NeighborGraph; its neighbor
+    weights must match the single-host dense-backend graph row-for-row."""
+    rng = np.random.default_rng(5)
+    r = rng.integers(1, 6, (64, 40)).astype(np.float32)
+    r *= rng.random((64, 40)) < 0.5
+    m = RatingMatrix(jnp.asarray(r), 64, 40)
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity", k_neighbors=5)
+    local = fit(jax.random.PRNGKey(0), m, spec, backend="dense")
+    dist = fit_distributed(jax.random.PRNGKey(0), m.ratings, spec, mesh,
+                           user_axes=("data",))
+    assert dist.sims is None
+    assert dist.graph.indices.shape == (64, 5)
+    np.testing.assert_allclose(np.sort(np.asarray(dist.graph.weights), 1),
+                               np.sort(np.asarray(local.graph.weights), 1),
+                               rtol=1e-4, atol=1e-4)
+    # prediction-level parity (robust to index tie-breaks at equal weight)
+    from repro.core import predict
+
+    users = jnp.asarray(rng.integers(0, 64, 128).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, 40, 128).astype(np.int32))
+    np.testing.assert_allclose(np.asarray(predict(dist, users, items, spec)),
+                               np.asarray(predict(local, users, items, spec)),
                                rtol=1e-4, atol=1e-4)
 
 
@@ -76,6 +103,59 @@ def test_streaming_knn_sharded_matches_dense_topk(mesh):
     # neighbor sets match row-by-row
     for i in range(u):
         assert set(np.asarray(idx)[i].tolist()) == set(np.asarray(want_idx)[i].tolist())
+
+
+def test_streaming_knn_sharded_ragged_chunks(mesh):
+    """u_local NOT a multiple of chunk_local (20 % 8): the padded candidate
+    path must neither crash nor double-count rows, and k > chunk_local must
+    still work (one gathered step holds chunk×S candidates)."""
+    rng = np.random.default_rng(11)
+    u, n, k = 40, 12, 13
+    rep = jnp.asarray(rng.normal(size=(u, n)).astype(np.float32))
+    rep_sharded = jax.device_put(rep, NamedSharding(mesh, P(("data",), None)))
+    with mesh:
+        vals, idx = jax.jit(
+            lambda r: streaming_knn_graph_sharded(
+                r, mesh, "cosine", k=k, chunk_local=8, row_axes=("data",),
+                exclude_self=True)
+        )(rep_sharded)
+    dense = jnp.where(jnp.eye(u, dtype=bool), -jnp.inf,
+                      dense_similarity(rep, rep, "cosine"))
+    want_vals, want_idx = jax.lax.top_k(dense, k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(want_vals), 1),
+                               rtol=1e-4, atol=1e-4)
+    for i in range(u):
+        assert set(np.asarray(idx)[i].tolist()) == set(np.asarray(want_idx)[i].tolist())
+
+
+@pytest.mark.parametrize("exclude_self", [False, True])
+def test_streaming_knn_sharded_multi_axis_global_ids(mesh, exclude_self):
+    """8-way sharding over BOTH mesh axes: the gathered-chunk → global-row-id
+    mapping must agree with the unsharded oracle (this is the satellite fix
+    for the old dead-code id arithmetic in streaming_knn_graph_sharded)."""
+    rng = np.random.default_rng(7)
+    u, n, k = 64, 12, 4
+    rep = jnp.asarray(rng.normal(size=(u, n)).astype(np.float32))
+    rep_sharded = jax.device_put(
+        rep, NamedSharding(mesh, P(("data", "model"), None)))
+    with mesh:
+        vals, idx = jax.jit(
+            lambda r: streaming_knn_graph_sharded(
+                r, mesh, "cosine", k=k, chunk_local=4,
+                row_axes=("data", "model"), exclude_self=exclude_self)
+        )(rep_sharded)
+    dense = dense_similarity(rep, rep, "cosine")
+    if exclude_self:
+        dense = jnp.where(jnp.eye(u, dtype=bool), -jnp.inf, dense)
+    want_vals, want_idx = jax.lax.top_k(dense, k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(want_vals), 1),
+                               rtol=1e-4, atol=1e-4)
+    for i in range(u):
+        assert set(np.asarray(idx)[i].tolist()) == set(np.asarray(want_idx)[i].tolist())
+    if exclude_self:
+        assert not (np.asarray(idx) == np.arange(u)[:, None]).any()
 
 
 def test_psum_compressed_close_to_exact(mesh):

@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
+from repro.core.selection import STRATEGIES, select_landmarks
 from repro.core.similarity import (
     dense_similarity,
     full_similarity_matrix,
@@ -61,6 +65,23 @@ def test_rating_permutation_invariance(blocks):
     s1 = masked_similarity(r_a, r_b, "cosine")
     s2 = masked_similarity(r_a[:, perm], r_b[:, perm], "cosine")
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([6, 10]),
+       st.sampled_from(STRATEGIES))
+@settings(max_examples=15, deadline=None)
+def test_selection_returns_n_distinct_valid_indices(seed, n, strategy):
+    """Every strategy must return exactly n DISTINCT in-range landmarks —
+    coresets in particular must not leak duplicate/placeholder picks when its
+    alive pool runs short in early rounds."""
+    rng = np.random.default_rng(seed)
+    u, p = 40, 24
+    r = rng.integers(1, 6, (u, p)).astype(np.float32) * (rng.random((u, p)) < 0.3)
+    idx = np.asarray(select_landmarks(jax.random.PRNGKey(seed), jnp.asarray(r),
+                                      n, strategy))
+    assert idx.shape == (n,)
+    assert idx.min() >= 0 and idx.max() < u
+    assert len(set(idx.tolist())) == n, idx
 
 
 @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))

@@ -22,7 +22,8 @@ def test_paper_pipeline_flops_linear_in_landmarks():
     for n in (10, 40, 80):
         spec = LandmarkSpec(n_landmarks=n, selection="random")
         lowered = jax.jit(
-            lambda key, r: fit(key, type(m)(r, m.n_users, m.n_items), spec).sims
+            lambda key, r: fit(key, type(m)(r, m.n_users, m.n_items), spec,
+                               dense_sims=True).sims
         ).lower(jax.random.PRNGKey(0), m.ratings)
         cost = lowered.compile().cost_analysis()
         cost = cost[0] if isinstance(cost, (list, tuple)) else cost
