@@ -205,6 +205,38 @@ def graph_vs_dense_fit_bench(n_users=8192, n_items=512, n_lm=32, iters=2) -> Lis
     return rows
 
 
+def foldin_vs_refit_bench(n_users=8192, n_items=512, batch=64, n_lm=32,
+                          iters=3) -> List[Dict]:
+    """Beyond-paper: the serve-path fold-in win — appending a ``batch`` of new
+    users to a fitted state (O(b·n·P) d1 + new-vs-all scan + back-patch)
+    versus the full refit the frozen artifact used to force. Both warm-jitted;
+    wall time per update."""
+    from repro.core import RatingMatrix, fold_in
+
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 6, (n_users + batch, n_items)).astype(np.float32)
+    r *= rng.random((n_users + batch, n_items)) < 0.05
+    r = jnp.asarray(r)
+    spec = LandmarkSpec(n_landmarks=n_lm, selection="popularity")
+    key = jax.random.PRNGKey(0)
+    st = fit(key, RatingMatrix(r[:n_users], n_users, n_items), spec)
+    jax.block_until_ready(st.graph.weights)
+
+    rows = []
+    new = r[n_users:]
+    fi = lambda: fold_in(st, new, spec)
+    refit = lambda: fit(key, RatingMatrix(r, n_users + batch, n_items), spec)
+    for variant, fn in (("fold_in", fi), ("refit", refit)):
+        jax.block_until_ready(fn().graph.weights)  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out.graph.weights)
+        rows.append({"variant": variant,
+                     "update_s": (time.perf_counter() - t0) / iters})
+    return rows
+
+
 def kernel_fusion_bench(a=2048, p=4096, n=128, iters=3) -> List[Dict]:
     """Beyond-paper: fused-kernel schedule vs XLA multi-GEMM (wall time, CPU;
     the HBM-traffic model is the TPU story — see EXPERIMENTS.md §Perf)."""

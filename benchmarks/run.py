@@ -97,6 +97,14 @@ def main(argv=None) -> None:
           f"graph_artifact_mb={g['artifact_bytes'] / 2**20:.1f};"
           f"artifact_ratio={mem_ratio:.0f}x{peak}")
 
+    # Beyond-paper: serve-path fold-in of a 64-user batch vs full refit
+    rows = paper_tables.foldin_vs_refit_bench()
+    by = {r["variant"]: r for r in rows}
+    fi, rf = by["fold_in"], by["refit"]
+    _emit("foldin_vs_refit[u=8192,b=64]", fi["update_s"] * 1e6,
+          f"foldin_s={fi['update_s']:.4f};refit_s={rf['update_s']:.4f};"
+          f"speedup={rf['update_s'] / max(fi['update_s'], 1e-9):.1f}x")
+
     # Roofline rows from the dry-run artifacts, if present
     for tag in ("singlepod", "multipod"):
         path = Path(f"exp/dryrun_{tag}.json")

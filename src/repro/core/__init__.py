@@ -11,7 +11,7 @@ from .similarity import (
     streaming_knn_graph_sharded,
 )
 from .selection import STRATEGIES, select_landmarks
-from .graph import BACKENDS, build_neighbor_graph
+from .graph import BACKENDS, build_neighbor_graph, extend_neighbor_graph
 from . import knn
 from .landmark_cf import (
     LandmarkState,
@@ -19,6 +19,7 @@ from .landmark_cf import (
     fit,
     fit_baseline,
     fit_distributed,
+    fold_in,
     predict,
     predict_dense,
 )
@@ -41,9 +42,11 @@ __all__ = [
     "select_landmarks",
     "build_neighbor_graph",
     "build_representation",
+    "extend_neighbor_graph",
     "fit",
     "fit_baseline",
     "fit_distributed",
+    "fold_in",
     "predict",
     "predict_dense",
     "knn",

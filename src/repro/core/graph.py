@@ -22,6 +22,13 @@ pallas      O(U·k) HBM             TPU + cosine d2: the fused sims+top-k
 ``auto`` resolves to ``pallas`` on TPU when d2 is cosine, else ``streaming``.
 All backends exclude self and store weight 0 for empty/invalid slots, so
 downstream Eq. (1) prediction (core.knn) is backend-agnostic.
+
+The serve path extends a fitted graph without refitting:
+:func:`extend_neighbor_graph` appends b new rows (new-vs-all candidate scan,
+never more than a (b, chunk) sims tile) and back-patches the existing rows
+whose top-k should now include a new row (one (U, b) block — b ≪ U). Peak
+memory is O((U+b)·k + U·b + b·chunk); no (U, U) or (U+b, U+b) intermediate
+exists (asserted on the jaxpr in tests/test_graph.py).
 """
 from __future__ import annotations
 
@@ -44,6 +51,11 @@ def resolve_backend(backend: str, measure: str) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"unknown graph backend {backend!r}; expected {BACKENDS}")
     return backend
+
+
+def _l2_normalize(x: jax.Array) -> jax.Array:
+    norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return (x / jnp.maximum(norm, EPS)).astype(jnp.float32)
 
 
 def finalize_topk(vals: jax.Array, idx: jax.Array) -> NeighborGraph:
@@ -105,9 +117,119 @@ def build_neighbor_graph(
             "use backend='streaming' for pearson/euclidean")
     from repro.kernels.knn_topk import topk_sim_kernel
 
-    norm = jnp.sqrt(jnp.sum(rep * rep, axis=-1, keepdims=True))
-    repn = (rep / jnp.maximum(norm, EPS)).astype(jnp.float32)
+    repn = _l2_normalize(rep)
     vals, idx = topk_sim_kernel(repn, repn, k=k, block=block,
                                 interpret=interpret, exclude_self=True,
                                 n_valid=u)
     return finalize_topk(vals, idx)
+
+
+def _streaming_query_topk(
+    queries: jax.Array,  # (b, n) new rows
+    cand_src: jax.Array,  # (C, n) candidate rows (existing + new)
+    measure: str,
+    k: int,
+    chunk: int,
+    self_offset: int,  # query row i is candidate row self_offset + i
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k candidates per query row, scanning (b, chunk) sims tiles only."""
+    b = queries.shape[0]
+    c = cand_src.shape[0]
+    chunk = max(min(chunk, c), min(k, c))
+    n_chunks = -(-c // chunk)
+    pad = n_chunks * chunk - c
+    if pad:
+        cand_src = jnp.pad(cand_src, ((0, pad), (0, 0)))
+    row_gid = self_offset + jnp.arange(b)
+
+    def body(carry, c_idx):
+        best_v, best_i = carry
+        cand = jax.lax.dynamic_slice_in_dim(cand_src, c_idx * chunk, chunk, axis=0)
+        sims = dense_similarity(queries, cand, measure)  # (b, chunk)
+        cand_ids = c_idx * chunk + jnp.arange(chunk)
+        invalid = (cand_ids >= c)[None, :] | (cand_ids[None, :] == row_gid[:, None])
+        sims = jnp.where(invalid, -jnp.inf, sims)
+        v, i = jax.lax.top_k(sims, k)
+        mv = jnp.concatenate([best_v, v], axis=1)
+        mi = jnp.concatenate([best_i, (i + c_idx * chunk).astype(jnp.int32)], axis=1)
+        nv, sel = jax.lax.top_k(mv, k)
+        return (nv, jnp.take_along_axis(mi, sel, axis=1)), None
+
+    init = (jnp.full((b, k), -jnp.inf, jnp.float32), jnp.zeros((b, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return vals, idx
+
+
+def extend_neighbor_graph(
+    graph: NeighborGraph,  # (U, k) fitted graph over ``rep`` rows
+    rep: jax.Array,  # (U, n) existing landmark-space rows
+    new_rep: jax.Array,  # (b, n) fold-in rows, appended as ids U..U+b-1
+    measure: str = "cosine",
+    backend: str = "auto",
+    *,
+    chunk: int = 4096,
+    interpret: Optional[bool] = None,
+) -> NeighborGraph:
+    """Append b rows to a fitted graph without refitting — the serve hot path.
+
+    Two halves, mirroring Lu & Shen's new-user similarity-list update:
+
+    1. **new-vs-all**: each new row scans all U+b candidates for its own top-k
+       (streaming (b, chunk) tiles; the ``pallas`` backend runs the skinny
+       fold-in kernel with the whole query block VMEM-resident).
+    2. **back-patch**: the (U, b) existing-vs-new block is merged into the
+       existing rows' best-lists, so an old user whose true top-k now contains
+       a new user is updated too — extend followed by extend matches one
+       bigger extend.
+
+    Exactness vs a from-scratch build on the concatenated rows holds when the
+    fitted graph was built with k ≤ U-1 (no empty slots: an empty slot stores
+    weight 0, which would shadow a negative-similarity candidate) and modulo
+    top-k tie-breaking. ``k`` stays ``graph.k``: fold-in never widens lists.
+    Compact (uint16/bf16) graphs are widened first; the result is full
+    precision (re-compact via ``NeighborGraph.to_compact``).
+    """
+    if graph.is_compact:
+        graph = graph.to_full()
+    u = rep.shape[0]
+    b = new_rep.shape[0]
+    k = graph.k
+    backend = resolve_backend(backend, measure)
+
+    # -- 1. new-vs-all: top-k rows for the b appended users -------------------
+    if backend == "pallas":
+        if measure != "cosine":
+            raise ValueError(
+                f"pallas extend supports cosine d2 only, got {measure!r}")
+        from repro.kernels.knn_topk import foldin_topk_kernel
+
+        cand = jnp.concatenate([_l2_normalize(rep), _l2_normalize(new_rep)])
+        vals, idx = foldin_topk_kernel(_l2_normalize(new_rep), cand, k=k,
+                                       block_c=min(chunk, 512),
+                                       interpret=interpret, self_offset=u)
+    elif backend == "dense":
+        # small-U parity path: one (b, U+b) block, still skinny (b ≪ U).
+        cand = jnp.concatenate([rep, new_rep])
+        sims = dense_similarity(new_rep, cand, measure)
+        gid = jnp.arange(u + b)
+        sims = jnp.where(gid[None, :] == (u + jnp.arange(b))[:, None],
+                         -jnp.inf, sims)
+        vals, idx = jax.lax.top_k(sims, k)
+    else:
+        cand = jnp.concatenate([rep, new_rep])
+        vals, idx = _streaming_query_topk(new_rep, cand, measure, k, chunk,
+                                          self_offset=u)
+    new_rows = finalize_topk(vals, idx)
+
+    # -- 2. back-patch: merge the (U, b) existing-vs-new block ----------------
+    back = dense_similarity(rep, new_rep, measure)  # (U, b)
+    new_ids = jnp.broadcast_to(u + jnp.arange(b, dtype=jnp.int32), (u, b))
+    mv = jnp.concatenate([graph.weights, back], axis=1)  # (U, k+b)
+    mi = jnp.concatenate([graph.indices, new_ids], axis=1)
+    pv, sel = jax.lax.top_k(mv, k)
+    pi = jnp.take_along_axis(mi, sel, axis=1)
+
+    return NeighborGraph(
+        jnp.concatenate([pi, new_rows.indices]),
+        jnp.concatenate([pv, new_rows.weights]),
+    )

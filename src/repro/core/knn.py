@@ -137,6 +137,32 @@ def predict_pairs(
     return jax.vmap(one)(users, items)
 
 
+@partial(jax.jit, static_argnames=("n",))
+def recommend_topn_graph(
+    graph: NeighborGraph,
+    ratings: jax.Array,  # (U, P), 0 == missing
+    users: jax.Array,  # (B,) query user ids
+    n: int = 10,
+):
+    """Top-N unseen items per query user — the serve-path recommendation op.
+
+    Scores every item with Eq. (1) from the user's fitted neighbor list, masks
+    items the user already rated, and returns ``(items, scores)`` of shape
+    (B, n). Cold rows (all weights 0) fall back to the user mean, so ranking
+    degrades to arbitrary-but-finite rather than NaN. A user with fewer than
+    ``n`` unrated items gets id -1 / score -inf in the exhausted slots — a
+    rated item is never returned.
+    """
+    mask, means, centered = _center(ratings)
+    idx = graph.indices[users]  # (B, k)
+    w = graph.weights[users].astype(centered.dtype)
+    preds = _block_predict(idx, w, centered, mask, means[users])  # (B, P)
+    preds = jnp.where(mask[users] > 0, -jnp.inf, preds)  # never re-recommend
+    scores, items = jax.lax.top_k(preds, n)
+    items = jnp.where(jnp.isfinite(scores), items, -1)
+    return items, scores
+
+
 @jax.jit
 def predict_pairs_graph(
     graph: NeighborGraph,

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import knn
-from .graph import build_neighbor_graph, finalize_topk
+from .graph import build_neighbor_graph, extend_neighbor_graph, finalize_topk
 from .selection import select_landmarks
 from .similarity import (
     dense_similarity,
@@ -110,6 +110,48 @@ def fit(
     graph = build_neighbor_graph(rep, spec.d2, spec.k_neighbors,
                                  backend=backend or spec.graph_backend)
     return LandmarkState(idx, rep, r, graph=graph)
+
+
+@partial(jax.jit, static_argnames=("spec", "sim_fn", "backend", "chunk"))
+def fold_in(
+    state: LandmarkState,
+    new_ratings: jax.Array,  # (b, P) new rows of the *oriented* matrix
+    spec: LandmarkSpec,
+    sim_fn=None,
+    *,
+    backend: Optional[str] = None,
+    chunk: int = 4096,
+) -> LandmarkState:
+    """Project b new users into the fitted state without a refit — the serve
+    path (Lu & Shen 1505.07900: the new-user similarity-list update).
+
+    d1 is O(b·n·P) against the frozen landmark rows; the graph grows via
+    :func:`~repro.core.graph.extend_neighbor_graph` (new-vs-all candidate scan
+    + back-patch of existing rows), so no (U, U) or (U+b, U+b) array ever
+    exists. Landmarks, d1/d2 measures and k are frozen at fit time — matching
+    a from-scratch ``fit`` on the concatenated matrix with the *same*
+    landmarks to within top-k tie-breaking (oracle test in tests/test_graph).
+
+    ``new_ratings`` rows follow the state's orientation (new users in user
+    mode, new items in item mode). The whole update jits: ``LandmarkState`` in,
+    ``LandmarkState`` out, all pure pytree ops.
+    """
+    if state.graph is None:
+        raise ValueError(
+            "fold_in needs a graph-backed state; dense-sims states "
+            "(fit(..., dense_sims=True) / fit_baseline) must refit")
+    landmarks = state.ratings[state.landmark_idx]  # (n, P) frozen at fit
+    fn = sim_fn if sim_fn is not None else masked_similarity
+    new_rep = fn(new_ratings, landmarks, spec.d1)  # (b, n)
+    graph = extend_neighbor_graph(
+        state.graph, state.representation, new_rep, spec.d2,
+        backend=backend or spec.graph_backend, chunk=chunk)
+    return LandmarkState(
+        state.landmark_idx,
+        jnp.concatenate([state.representation, new_rep]),
+        jnp.concatenate([state.ratings, new_ratings]),
+        graph=graph,
+    )
 
 
 def predict(state: LandmarkState, users: jax.Array, items: jax.Array, spec: LandmarkSpec):

@@ -101,6 +101,29 @@ class NeighborGraph:
     def k(self) -> int:
         return self.indices.shape[1]
 
+    @property
+    def is_compact(self) -> bool:
+        return self.indices.dtype != jnp.int32 or self.weights.dtype != jnp.float32
+
+    def to_compact(self) -> "NeighborGraph":
+        """Halve the artifact: uint16 ids + bf16 weights.
+
+        uint16 (not int16) so the full U < 65536 id range fits. Gathers accept
+        uint16 indices and bf16 weights promote to f32 inside Eq. (1), so a
+        compact graph predicts directly; ``to_full`` round-trips ids exactly
+        and weights to bf16 precision (~3 decimal digits).
+        """
+        if self.n_nodes > 65535:
+            raise ValueError(
+                f"compact ids are uint16: U={self.n_nodes} exceeds 65535")
+        return NeighborGraph(self.indices.astype(jnp.uint16),
+                             self.weights.astype(jnp.bfloat16))
+
+    def to_full(self) -> "NeighborGraph":
+        """Widen back to the canonical int32 ids + f32 weights."""
+        return NeighborGraph(self.indices.astype(jnp.int32),
+                             self.weights.astype(jnp.float32))
+
     @staticmethod
     def from_dense_sims(sims: jax.Array, k: int, exclude_self: bool = True
                         ) -> "NeighborGraph":

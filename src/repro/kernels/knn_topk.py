@@ -140,3 +140,116 @@ def topk_sim_ref(rep, cand, k=14):
     """Oracle: dense sims + lax.top_k."""
     sims = rep.astype(jnp.float32) @ cand.astype(jnp.float32).T
     return jax.lax.top_k(sims, k)
+
+
+# --------------------------------------------------------------------- fold-in
+# Serving variant for the skinny (b, C) shape, b ≪ C: the whole query block
+# lives in VMEM for the kernel's entire lifetime and the grid runs over
+# candidate chunks only. The square-tile kernel above re-fetches its rep tile
+# every (i, j) step and pays a (bu=128)-row tile even when b=64; here the
+# query fetch happens once and the row axis is exactly the padded batch.
+
+
+def _foldin_kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *,
+                   k, n_c, bc, n_valid, self_offset):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        best_v[...] = jnp.full_like(best_v, -jnp.inf)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    rep = rep_ref[...].astype(jnp.float32)  # (b_pad, n) — resident all steps
+    cand = cand_ref[...].astype(jnp.float32)  # (bc, n)
+    sims = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (b_pad, bc)
+    b_pad = rep.shape[0]
+    base = pl.program_id(0) * bc
+    col_gid = base + jax.lax.broadcasted_iota(jnp.int32, (b_pad, bc), 1)
+    # query row i is candidate row self_offset + i (its own fold-in slot)
+    row_gid = self_offset + jax.lax.broadcasted_iota(jnp.int32, (b_pad, bc), 0)
+    sims = jnp.where((col_gid >= n_valid) | (col_gid == row_gid), -jnp.inf, sims)
+
+    bv, bi = best_v[...], best_i[...]
+    for _ in range(k):  # k rounds: extract chunk max, displace the current min
+        col = jnp.argmax(sims, axis=1)
+        m = jnp.max(sims, axis=1)
+        jmin = jnp.argmin(bv, axis=1)
+        vmin = jnp.min(bv, axis=1)
+        take = m > vmin
+        hit = take[:, None] & (jnp.arange(bv.shape[1])[None] == jmin[:, None])
+        bv = jnp.where(hit, m[:, None], bv)
+        bi = jnp.where(hit, (base + col)[:, None].astype(jnp.int32), bi)
+        sims = jnp.where(jnp.arange(sims.shape[1])[None] == col[:, None],
+                         -jnp.inf, sims)
+    best_v[...], best_i[...] = bv, bi
+
+    @pl.when(pl.program_id(0) == n_c - 1)
+    def _done():
+        val_ref[...] = best_v[...]
+        idx_ref[...] = best_i[...]
+
+
+def foldin_topk_kernel(
+    rep: jax.Array,  # (b, n) L2-normalized fold-in rows — queries
+    cand: jax.Array,  # (C, n) L2-normalized candidates (existing + new rows)
+    k: int = 14,
+    block_c: int = 512,
+    interpret: bool = None,
+    self_offset: Optional[int] = None,
+    n_valid: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k candidate dot products for a skinny fold-in batch.
+
+    ``self_offset`` marks where the query rows sit in the candidate id space
+    (query i == candidate ``self_offset + i``, masked out so a fold-in row
+    never lists itself); pass None (→ past the end) when queries are not
+    among the candidates. ``n_valid`` restricts selection to the first
+    ``n_valid`` candidates, as in :func:`topk_sim_kernel`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, n = rep.shape
+    c = cand.shape[0]
+    if n_valid is None:
+        n_valid = c
+    if self_offset is None:
+        self_offset = c  # no candidate id ever matches
+    b_pad = -(-b // 8) * 8
+    bc = min(block_c, -(-c // 8) * 8)
+    c_pad = -(-c // bc) * bc
+    if b_pad != b:
+        rep = jnp.pad(rep, ((0, b_pad - b), (0, 0)))
+    if c_pad != c:
+        cand = jnp.pad(cand, ((0, c_pad - c), (0, 0)))
+    n_c = c_pad // bc
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)
+        )
+    vals, idx = pl.pallas_call(
+        functools.partial(_foldin_kernel, k=k, n_c=n_c, bc=bc,
+                          n_valid=n_valid, self_offset=self_offset),
+        grid=(n_c,),
+        in_specs=[
+            pl.BlockSpec((b_pad, n), lambda j: (0, 0)),  # fetched once
+            pl.BlockSpec((bc, n), lambda j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_pad, k), lambda j: (0, 0)),
+            pl.BlockSpec((b_pad, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b_pad, k), jnp.float32),
+            pltpu.VMEM((b_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(rep, cand)
+    return vals[:b], idx[:b]

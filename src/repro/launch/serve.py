@@ -1,10 +1,23 @@
-"""Serving launcher: prefill + batched decode with the exact or landmark KV
-path.  ``python -m repro.launch.serve --arch smollm-360m --smoke --tokens 16``
+"""Serving launcher — mode-dispatched on ``--workload``:
+
+- ``lm`` (default): prefill + batched decode with the exact or landmark KV
+  path.  ``python -m repro.launch.serve --arch smollm-360m --smoke --tokens 16``
+- ``cf``: the landmark-CF lifecycle (docs/serving.md) — load a fitted
+  ``LandmarkState`` artifact (fit + checkpoint one in-process when the
+  directory is empty), run warm jitted ``predict_pairs_graph`` / top-N
+  recommendation waves, and apply ``fold_in`` batches between waves.
+  ``python -m repro.launch.serve --workload cf --smoke``
+
+CF latency is reported per wave as p50/p95 over the timed request loop.
+Fold-in changes U, so the first request after it recompiles the step; the
+wave loop re-warms before timing (a production deployment would pad U to
+bucket sizes to keep one executable — see docs/serving.md).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import tempfile
 import time
 
 import jax
@@ -17,17 +30,8 @@ from repro.distributed.sharding import DEFAULT_RULES
 from repro.models import transformer as lm_mod
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--landmark", action="store_true",
-                    help="decode through O(n) landmark summaries")
-    args = ap.parse_args(argv)
-
+# ------------------------------------------------------------------------- lm
+def _serve_lm(args):
     arch = registry.get(args.arch)
     cfg = arch.smoke_model if args.smoke else arch.model
     params = lm_mod.init_lm(jax.random.PRNGKey(0), cfg)
@@ -69,6 +73,162 @@ def main(argv=None):
     print(f"decode {args.tokens} tokens ({mode}): "
           f"{dt/args.tokens*1e3:.1f} ms/token")
     print("sample ids:", np.asarray(jnp.concatenate(out_tokens, 1))[0][:12])
+
+
+# ------------------------------------------------------------------------- cf
+def _synth_ratings(rng, users, items, density=0.08):
+    r = rng.integers(1, 6, (users, items)).astype(np.float32)
+    r *= rng.random((users, items)) < density
+    return jnp.asarray(r)
+
+
+def _percentiles(ts):
+    ms = np.asarray(ts) * 1e3
+    return float(np.percentile(ms, 50)), float(np.percentile(ms, 95))
+
+
+def _cf_wave(state, rng, args, wave):
+    """One request wave: batched pair predictions + top-N recommendations,
+    each warmed once then timed per jitted call."""
+    from repro.core import knn
+
+    u = state.ratings.shape[0]
+    p = state.ratings.shape[1]
+
+    def pair_batch():
+        users = jnp.asarray(rng.integers(0, u, args.batch).astype(np.int32))
+        items = jnp.asarray(rng.integers(0, p, args.batch).astype(np.int32))
+        return users, items
+
+    users, items = pair_batch()
+    jax.block_until_ready(  # warm: compiles for the current (U, P) shapes
+        knn.predict_pairs_graph(state.graph, state.ratings, users, items))
+    pair_ts = []
+    for _ in range(args.requests):
+        users, items = pair_batch()
+        t0 = time.perf_counter()
+        out = knn.predict_pairs_graph(state.graph, state.ratings, users, items)
+        jax.block_until_ready(out)
+        pair_ts.append(time.perf_counter() - t0)
+    if not bool(jnp.isfinite(out).all()):
+        raise RuntimeError("non-finite predictions in serve wave")
+
+    topn_users = jnp.asarray(rng.integers(0, u, args.batch).astype(np.int32))
+    jax.block_until_ready(knn.recommend_topn_graph(
+        state.graph, state.ratings, topn_users, n=args.topn))
+    topn_ts = []
+    for _ in range(max(1, args.requests // 4)):
+        topn_users = jnp.asarray(rng.integers(0, u, args.batch).astype(np.int32))
+        t0 = time.perf_counter()
+        items_r, _ = knn.recommend_topn_graph(
+            state.graph, state.ratings, topn_users, n=args.topn)
+        jax.block_until_ready(items_r)
+        topn_ts.append(time.perf_counter() - t0)
+
+    p50, p95 = _percentiles(pair_ts)
+    t50, t95 = _percentiles(topn_ts)
+    print(f"wave {wave}: U={u} predict {args.requests}x{args.batch} pairs "
+          f"p50={p50:.2f}ms p95={p95:.2f}ms | "
+          f"top-{args.topn} x{args.batch} users p50={t50:.2f}ms p95={t95:.2f}ms")
+
+
+def _serve_cf(args):
+    from repro.core import LandmarkSpec, RatingMatrix, fit, fold_in
+    from repro.train.checkpoint import (latest_step, load_landmark_state,
+                                        save_landmark_state)
+
+    arch = registry.get("landmark_cf")
+    spec: LandmarkSpec = arch.smoke_model if args.smoke else arch.model
+    if args.smoke:
+        args.users, args.items = min(args.users, 512), min(args.items, 128)
+        args.requests = min(args.requests, 8)
+        args.foldin = min(args.foldin, 16)
+        args.waves = min(args.waves, 2)
+
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="cf_serve_")
+    rng = np.random.default_rng(0)
+
+    if latest_step(ckpt_dir) is None:
+        r = _synth_ratings(rng, args.users, args.items)
+        t0 = time.perf_counter()
+        st = fit(jax.random.PRNGKey(0),
+                 RatingMatrix(r, args.users, args.items), spec)
+        jax.block_until_ready(st.graph.weights)
+        t_fit = time.perf_counter() - t0
+        save_landmark_state(ckpt_dir, st, compact=args.compact)
+        print(f"fit U={args.users} P={args.items} n={spec.n_landmarks} "
+              f"k={st.graph.k}: {t_fit*1e3:.0f}ms -> checkpointed {ckpt_dir}")
+
+    t0 = time.perf_counter()
+    state = load_landmark_state(ckpt_dir, widen=False)
+    t_load = time.perf_counter() - t0
+    stored_compact = state.graph.is_compact  # what is actually on disk
+    art_kb = (state.graph.indices.nbytes + state.graph.weights.nbytes) / 1024
+    if stored_compact:
+        state = dataclasses.replace(state, graph=state.graph.to_full())
+    print(f"loaded U={state.ratings.shape[0]} graph k={state.graph.k} "
+          f"({art_kb:.0f}KB{', stored compact' if stored_compact else ''}): "
+          f"{t_load*1e3:.0f}ms")
+
+    # fold-in stream: sized from the ARTIFACT's item space, not the CLI flags
+    # (reusing --ckpt with different --users/--items must still be correct)
+    n_items = state.ratings.shape[1]
+    fold_stream = _synth_ratings(rng, args.foldin * max(args.waves - 1, 0),
+                                 n_items)
+    for wave in range(args.waves):
+        _cf_wave(state, rng, args, wave)
+        if wave == args.waves - 1:
+            break
+        batch = fold_stream[wave * args.foldin:(wave + 1) * args.foldin]
+        jax.block_until_ready(  # warm the fold-in executable for this shape
+            fold_in(state, batch, spec, backend=args.graph_backend))
+        t0 = time.perf_counter()
+        state = fold_in(state, batch, spec, backend=args.graph_backend)
+        jax.block_until_ready(state.graph.weights)
+        dt = time.perf_counter() - t0
+        print(f"fold-in +{args.foldin} users: {dt*1e3:.1f}ms "
+              f"(U {state.ratings.shape[0] - args.foldin}"
+              f"->{state.ratings.shape[0]}, no refit)")
+    print("cf serve: done")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "cf"), default="lm")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="lm: decode batch (default 4); cf: pairs/users per "
+                    "request (default 256)")
+    # lm flags
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--landmark", action="store_true",
+                    help="lm: decode through O(n) landmark summaries")
+    # cf flags
+    ap.add_argument("--ckpt", default=None,
+                    help="cf: artifact directory (fit+save here when empty; "
+                    "default: fresh temp dir)")
+    ap.add_argument("--users", type=int, default=8192)
+    ap.add_argument("--items", type=int, default=512)
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="cf: timed predict calls per wave")
+    ap.add_argument("--foldin", type=int, default=64,
+                    help="cf: new users folded in between waves")
+    ap.add_argument("--topn", type=int, default=10)
+    ap.add_argument("--compact", action="store_true",
+                    help="cf: store the artifact as uint16 ids + bf16 weights")
+    ap.add_argument("--graph-backend", default="auto",
+                    choices=("auto", "dense", "streaming", "pallas"))
+    args = ap.parse_args(argv)
+    if args.batch is None:
+        args.batch = 256 if args.workload == "cf" else 4
+
+    if args.workload == "cf":
+        _serve_cf(args)
+    else:
+        _serve_lm(args)
 
 
 if __name__ == "__main__":

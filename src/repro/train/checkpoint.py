@@ -30,8 +30,12 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> Path:
-    """Write a sharded checkpoint; atomic via tmp-dir + rename."""
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3,
+                    extra_files: Optional[Dict[str, str]] = None) -> Path:
+    """Write a sharded checkpoint; atomic via tmp-dir + rename.
+
+    ``extra_files`` (name → text) land inside the tmp dir before the rename,
+    so sidecars commit atomically with the tensors."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -65,6 +69,8 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> Path
             {"shape": list(arr.shape), "dtype": str(arr.dtype), "shards": shards}
         )
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    for name, text in (extra_files or {}).items():
+        (tmp / name).write_text(text)
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)  # atomic commit
@@ -116,6 +122,79 @@ def restore_checkpoint(directory: str, tree_like: Any, step: Optional[int] = Non
         arr = jax.device_put(full, sh) if sh is not None else jax.numpy.asarray(full)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------- CF artifacts
+# The serve path (launch/serve.py --workload cf) starts from a saved
+# LandmarkState instead of refitting in-process. The state is stored through
+# the generic sharded machinery above as a field-named dict (stable flatten
+# order: dicts flatten sorted by key) plus a state.json sidecar recording
+# which optional fields exist — restore needs no fitted template.
+
+
+def save_landmark_state(directory: str, state, *, compact: bool = False,
+                        step: int = 0, keep: int = 3) -> Path:
+    """Persist a fitted ``LandmarkState`` (graph ids/weights included).
+
+    ``compact=True`` stores the graph as uint16 ids + bf16 weights (half the
+    artifact bytes; requires U < 65536 — see ``NeighborGraph.to_compact``).
+    """
+    graph = state.graph
+    if compact and graph is not None:
+        graph = graph.to_compact()
+    tree = {
+        "landmark_idx": state.landmark_idx,
+        "representation": state.representation,
+        "ratings": state.ratings,
+    }
+    if graph is not None:
+        tree["graph_indices"] = graph.indices
+        tree["graph_weights"] = graph.weights
+    if state.sims is not None:
+        tree["sims"] = state.sims
+    meta = {"kind": "landmark_state", "fields": sorted(tree),
+            "compact": bool(compact and graph is not None)}
+    return save_checkpoint(directory, step, tree, keep=keep,
+                           extra_files={"state.json": json.dumps(meta)})
+
+
+def landmark_state_meta(directory: str, step: Optional[int] = None) -> Dict:
+    """The state.json sidecar of a saved LandmarkState (fields, compact flag)
+    — what is actually on disk, independent of how the caller loads it."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    return json.loads(
+        (Path(directory) / f"step_{step:08d}" / "state.json").read_text())
+
+
+def load_landmark_state(directory: str, step: Optional[int] = None,
+                        *, widen: bool = True):
+    """Rebuild a ``LandmarkState`` from ``save_landmark_state`` output.
+
+    ``widen=True`` returns the canonical int32/f32 graph even if the artifact
+    was stored compact (predictions accept either; fold-in widens anyway).
+    """
+    from repro.core.landmark_cf import LandmarkState
+    from repro.core.types import NeighborGraph
+
+    step = step if step is not None else latest_step(directory)
+    meta = landmark_state_meta(directory, step)
+    tree = restore_checkpoint(directory, {f: 0 for f in meta["fields"]},
+                              step=step)
+    graph = None
+    if "graph_indices" in tree:
+        graph = NeighborGraph(jax.numpy.asarray(tree["graph_indices"]),
+                              jax.numpy.asarray(tree["graph_weights"]))
+        if widen and graph.is_compact:
+            graph = graph.to_full()
+    return LandmarkState(
+        jax.numpy.asarray(tree["landmark_idx"]),
+        jax.numpy.asarray(tree["representation"]),
+        jax.numpy.asarray(tree["ratings"]),
+        graph=graph,
+        sims=jax.numpy.asarray(tree["sims"]) if "sims" in tree else None,
+    )
 
 
 class AsyncCheckpointer:

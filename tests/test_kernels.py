@@ -97,3 +97,47 @@ def test_topk_sim_kernel_matches_dense_topk(u, c, n, k):
         len(set(np.asarray(idx)[i]) & set(np.asarray(wi)[i])) / k for i in range(u)
     ])
     assert overlap > 0.999
+
+
+@pytest.mark.parametrize("b,c,n,k", [(16, 1024, 64, 8), (7, 300, 33, 5),
+                                     (64, 2048, 128, 13)])
+def test_foldin_topk_kernel_matches_oracle(b, c, n, k):
+    """Serving kernel for the skinny (b, C) fold-in shape: the query block is
+    VMEM-resident, the grid runs over candidate chunks only."""
+    from repro.kernels.knn_topk import foldin_topk_kernel
+
+    rep = RNG.normal(size=(b, n)).astype(np.float32)
+    rep /= np.linalg.norm(rep, axis=1, keepdims=True)
+    cand = RNG.normal(size=(c, n)).astype(np.float32)
+    cand /= np.linalg.norm(cand, axis=1, keepdims=True)
+    vals, idx = foldin_topk_kernel(jnp.asarray(rep), jnp.asarray(cand), k=k,
+                                   block_c=256)
+    wv, wi = jax.lax.top_k(jnp.asarray(rep @ cand.T), k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(wv), 1), rtol=1e-5, atol=1e-6)
+    overlap = np.mean([
+        len(set(np.asarray(idx)[i]) & set(np.asarray(wi)[i])) / k for i in range(b)
+    ])
+    assert overlap > 0.999
+
+
+def test_foldin_topk_kernel_excludes_self_rows():
+    """Fold-in batches are part of the candidate set (new-vs-new sims count)
+    but query i must never select candidate self_offset + i — its own slot."""
+    from repro.kernels.knn_topk import foldin_topk_kernel
+
+    b, c, n, k, off = 8, 512, 32, 6, 504
+    rep = RNG.normal(size=(b, n)).astype(np.float32)
+    rep /= np.linalg.norm(rep, axis=1, keepdims=True)
+    cand = RNG.normal(size=(c, n)).astype(np.float32)
+    cand /= np.linalg.norm(cand, axis=1, keepdims=True)
+    cand[off:off + b] = rep  # each query would be its own best match (sim 1)
+    vals, idx = foldin_topk_kernel(jnp.asarray(rep), jnp.asarray(cand), k=k,
+                                   block_c=128, self_offset=off)
+    idx = np.asarray(idx)
+    assert not (idx == (off + np.arange(b))[:, None]).any()
+    sims = rep @ cand.T
+    sims[np.arange(b), off + np.arange(b)] = -np.inf
+    wv, _ = jax.lax.top_k(jnp.asarray(sims), k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(wv), 1), rtol=1e-5, atol=1e-6)

@@ -92,6 +92,55 @@ def test_trainer_checkpoints_and_resumes(tmp_path):
     assert len(out2["losses"]) == 4  # only steps 6..9 ran
 
 
+def test_landmark_state_checkpoint_roundtrip(tmp_path):
+    """The serve artifact: save/load a fitted LandmarkState (graph included),
+    full and compact, and keep predictions (bf16-tolerant for compact)."""
+    from repro.train.checkpoint import load_landmark_state, save_landmark_state
+
+    data = synthesize("movielens100k", seed=2)
+    m = data.to_matrix(slice(0, 30_000))
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity", k_neighbors=5)
+    st = fit(jax.random.PRNGKey(0), m, spec)
+    users = jnp.asarray(data.users[:500]); items = jnp.asarray(data.items[:500])
+    want = np.asarray(predict(st, users, items, spec))
+
+    save_landmark_state(str(tmp_path / "full"), st)
+    got = np.asarray(predict(load_landmark_state(str(tmp_path / "full")),
+                             users, items, spec))
+    np.testing.assert_array_equal(got, want)
+
+    save_landmark_state(str(tmp_path / "compact"), st, compact=True)
+    stc = load_landmark_state(str(tmp_path / "compact"), widen=False)
+    assert stc.graph.is_compact
+    got_c = np.asarray(predict(load_landmark_state(str(tmp_path / "compact")),
+                               users, items, spec))
+    np.testing.assert_allclose(got_c, want, rtol=2e-2, atol=2e-2)
+
+
+def test_serve_cf_smoke_lifecycle(tmp_path, capsys):
+    """Acceptance: the CF serve path end-to-end — fit+checkpoint, load,
+    predict wave, fold-in, predict wave — prints per-wave latency."""
+    from repro.launch import serve
+
+    serve.main([
+        "--workload", "cf", "--smoke", "--ckpt", str(tmp_path),
+        "--users", "128", "--items", "64", "--requests", "2",
+        "--batch", "32", "--foldin", "4", "--waves", "2", "--topn", "3",
+    ])
+    out = capsys.readouterr().out
+    assert "cf serve: done" in out
+    assert "fold-in +4 users" in out
+    assert out.count("p50=") >= 2  # a latency line per wave
+    assert "wave 1: U=132" in out  # second wave sees the folded-in users
+
+    # the artifact persisted: a second serve run loads it instead of refitting
+    serve.main(["--workload", "cf", "--smoke", "--ckpt", str(tmp_path),
+                "--users", "128", "--items", "64", "--requests", "2",
+                "--batch", "32", "--foldin", "4", "--waves", "2"])
+    out2 = capsys.readouterr().out
+    assert "fit " not in out2 and "loaded U=128" in out2
+
+
 def test_landmark_decode_is_finite_and_cheap():
     """Landmark O(n)/token decode: state size independent of context length."""
     cfg = registry.get("gemma-7b").smoke_model
