@@ -105,6 +105,18 @@ def main(argv=None) -> None:
           f"foldin_s={fi['update_s']:.4f};refit_s={rf['update_s']:.4f};"
           f"speedup={rf['update_s'] / max(fi['update_s'], 1e-9):.1f}x")
 
+    # Beyond-paper: background landmark refresh vs synchronous refit-on-drift
+    rows = paper_tables.refresh_vs_refit_bench()
+    by = {r["variant"]: r for r in rows}
+    bg, sy = by["background"], by["sync"]
+    _emit("refresh_vs_refit[u=1024,waves=6]", bg["wall_s"] * 1e6,
+          f"bg_worst_ms={bg['worst_request_s'] * 1e3:.1f};"
+          f"sync_worst_ms={sy['worst_request_s'] * 1e3:.1f};"
+          f"stall_ratio={sy['worst_request_s'] / max(bg['worst_request_s'], 1e-9):.0f}x;"
+          f"bg_wall_s={bg['wall_s']:.2f};sync_wall_s={sy['wall_s']:.2f};"
+          f"buckets={bg['buckets']};"
+          f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
+
     # Roofline rows from the dry-run artifacts, if present
     for tag in ("singlepod", "multipod"):
         path = Path(f"exp/dryrun_{tag}.json")

@@ -1,7 +1,27 @@
-"""Arch config 'landmark_cf' — exact hyperparameters in registry.py (one source of truth)."""
+"""Arch config 'landmark_cf' — exact hyperparameters in registry.py (one source of truth).
+
+The continual-serving lifecycle (repro.lifecycle) is configured here too:
+``REFRESH`` holds the production drift/refresh thresholds, ``SMOKE_REFRESH``
+a twitchy variant sized for the CI lifecycle replay (small reservoir, fires
+after two consecutive breaching evaluations).
+"""
+from repro.lifecycle.policy import RefreshSpec
+
 from .registry import get
 
 CONFIG = get("landmark_cf")
 MODEL = CONFIG.model
 SMOKE = CONFIG.smoke_model
 SHAPES = CONFIG.shapes
+
+REFRESH = RefreshSpec()
+SMOKE_REFRESH = RefreshSpec(
+    mae_ratio=1.15,  # holdout MAE on ~256 withheld ratings is noisy; the
+    min_coverage_ratio=0.8,  # coverage drop is the reliable smoke signal
+    max_foldin_frac=0.6,
+    patience=2,
+    cooldown_waves=1,
+    min_holdout=16,
+    reservoir=256,
+    holdout_frac=0.25,
+)

@@ -11,7 +11,12 @@ from .similarity import (
     streaming_knn_graph_sharded,
 )
 from .selection import STRATEGIES, select_landmarks
-from .graph import BACKENDS, build_neighbor_graph, extend_neighbor_graph
+from .graph import (
+    BACKENDS,
+    build_neighbor_graph,
+    extend_neighbor_graph,
+    extend_neighbor_graph_bucketed,
+)
 from . import knn
 from .landmark_cf import (
     LandmarkState,
@@ -43,6 +48,7 @@ __all__ = [
     "build_neighbor_graph",
     "build_representation",
     "extend_neighbor_graph",
+    "extend_neighbor_graph_bucketed",
     "fit",
     "fit_baseline",
     "fit_distributed",

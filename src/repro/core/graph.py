@@ -29,6 +29,12 @@ never more than a (b, chunk) sims tile) and back-patches the existing rows
 whose top-k should now include a new row (one (U, b) block — b ≪ U). Peak
 memory is O((U+b)·k + U·b + b·chunk); no (U, U) or (U+b, U+b) intermediate
 exists (asserted on the jaxpr in tests/test_graph.py).
+
+:func:`extend_neighbor_graph_bucketed` is the shape-stable variant behind
+``repro.lifecycle.buckets``: arrays stay padded to a bucket capacity C and the
+valid-row counts are *traced* scalars, so the whole fold-in step compiles once
+per (C, batch-bucket) pair instead of once per fold-in. Padded rows are masked
+out of both halves of the update — they can never be selected as neighbors.
 """
 from __future__ import annotations
 
@@ -233,3 +239,106 @@ def extend_neighbor_graph(
         jnp.concatenate([pi, new_rows.indices]),
         jnp.concatenate([pv, new_rows.weights]),
     )
+
+
+def _bucketed_query_topk(
+    queries: jax.Array,  # (bq, n) batch-bucket rows (padded)
+    cand_src: jax.Array,  # (C, n) capacity-padded candidate rows
+    measure: str,
+    k: int,
+    chunk: int,
+    n_valid: jax.Array,  # () rows < n_valid were valid before this extend
+    b_valid: jax.Array,  # () first b_valid queries are real
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked top-k over a capacity-padded candidate block, (bq, chunk) tiles.
+
+    Valid candidates are exactly rows ``< n_valid + b_valid`` (the new batch is
+    written contiguously at ``n_valid`` before this runs); query i excludes its
+    own slot ``n_valid + i``. All masks are traced, so the executable is shared
+    by every fold-in at this (C, bq) shape.
+    """
+    bq = queries.shape[0]
+    c = cand_src.shape[0]
+    chunk = max(min(chunk, c), min(k, c))
+    n_chunks = -(-c // chunk)
+    pad = n_chunks * chunk - c
+    if pad:
+        cand_src = jnp.pad(cand_src, ((0, pad), (0, 0)))
+    row_gid = n_valid + jnp.arange(bq)
+
+    def body(carry, c_idx):
+        best_v, best_i = carry
+        cand = jax.lax.dynamic_slice_in_dim(cand_src, c_idx * chunk, chunk, axis=0)
+        sims = dense_similarity(queries, cand, measure)  # (bq, chunk)
+        cand_ids = c_idx * chunk + jnp.arange(chunk)
+        invalid = ((cand_ids >= n_valid + b_valid)[None, :]
+                   | (cand_ids[None, :] == row_gid[:, None]))
+        sims = jnp.where(invalid, -jnp.inf, sims)
+        v, i = jax.lax.top_k(sims, k)
+        mv = jnp.concatenate([best_v, v], axis=1)
+        mi = jnp.concatenate([best_i, (i + c_idx * chunk).astype(jnp.int32)], axis=1)
+        nv, sel = jax.lax.top_k(mv, k)
+        return (nv, jnp.take_along_axis(mi, sel, axis=1)), None
+
+    init = (jnp.full((bq, k), -jnp.inf, jnp.float32), jnp.zeros((bq, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return vals, idx
+
+
+def extend_neighbor_graph_bucketed(
+    graph: NeighborGraph,  # (C, k) capacity-padded graph
+    rep: jax.Array,  # (C, n) rep with the new batch ALREADY written at n_valid
+    new_rep: jax.Array,  # (bq, n) batch-bucket rows; rows >= b_valid are filler
+    n_valid: jax.Array,  # () int32 valid rows BEFORE this extend
+    b_valid: jax.Array,  # () int32 real rows in the batch bucket
+    measure: str = "cosine",
+    *,
+    chunk: int = 4096,
+) -> NeighborGraph:
+    """Shape-stable :func:`extend_neighbor_graph`: same (C, k) graph out.
+
+    The two halves mirror the growing variant, with padding masked throughout:
+
+    1. **new-vs-all** — each batch row scans the valid prefix (ids
+       ``< n_valid + b_valid``) for its top-k; its rows land in graph slots
+       ``[n_valid, n_valid + bq)``. Filler batch rows are stored as (0, 0.0)
+       so the padded-graph invariant (weight 0 everywhere above the valid
+       prefix) is preserved.
+    2. **back-patch** — the (C, bq) existing-vs-new block is merged into rows
+       ``< n_valid`` only; filler batch columns are -inf so they can never
+       displace a real neighbor.
+
+    Because every mask is a traced scalar, one executable serves all fold-ins
+    at a given (C, bq); recompiles happen only on bucket growth.
+    """
+    if graph.is_compact:
+        graph = graph.to_full()
+    bq = new_rep.shape[0]
+    c = rep.shape[0]
+    k = graph.k
+
+    # -- 1. new-vs-all over the valid prefix ---------------------------------
+    vals, idx = _bucketed_query_topk(new_rep, rep, measure, k, chunk,
+                                     n_valid, b_valid)
+    new_rows = finalize_topk(vals, idx)
+    q_valid = (jnp.arange(bq) < b_valid)[:, None]
+    new_idx = jnp.where(q_valid, new_rows.indices, 0)
+    new_w = jnp.where(q_valid, new_rows.weights, 0.0)
+
+    # -- 2. back-patch valid existing rows with the valid batch columns ------
+    back = dense_similarity(rep, new_rep, measure)  # (C, bq)
+    back = jnp.where((jnp.arange(bq) < b_valid)[None, :], back, -jnp.inf)
+    batch_ids = (n_valid + jnp.arange(bq, dtype=jnp.int32))[None, :]
+    mv = jnp.concatenate([graph.weights, back], axis=1)  # (C, k + bq)
+    mi = jnp.concatenate([graph.indices, jnp.broadcast_to(batch_ids, (c, bq))],
+                         axis=1)
+    pv, sel = jax.lax.top_k(mv, k)
+    pi = jnp.take_along_axis(mi, sel, axis=1)
+    r_valid = (jnp.arange(c) < n_valid)[:, None]
+    indices = jnp.where(r_valid, pi, graph.indices)
+    weights = jnp.where(r_valid, pv, graph.weights)
+
+    # write the batch rows into their slots (traced offset, static shapes)
+    indices = jax.lax.dynamic_update_slice(indices, new_idx, (n_valid, 0))
+    weights = jax.lax.dynamic_update_slice(weights, new_w, (n_valid, 0))
+    return NeighborGraph(indices, weights)

@@ -17,6 +17,11 @@ Two entry points per prediction shape:
   already baked into the graph weights (weight 0 contributes nothing), and
   mean-centering is identical, so a graph built from ``sims`` by top-k
   reproduces the oracle bit-for-bit.
+
+The graph entry points accept an optional ``n_valid`` (traced scalar): rows
+``>= n_valid`` are bucket padding (``repro.lifecycle.buckets``) and their
+weights are forced to 0 before Eq. (1), so a padded slot can never contribute
+to a prediction or a recommendation even if its graph row holds stale data.
 """
 from __future__ import annotations
 
@@ -28,6 +33,16 @@ import jax.numpy as jnp
 from .types import NeighborGraph
 
 EPS = 1e-8
+
+
+def _mask_padded_rows(idx: jax.Array, w: jax.Array, n_valid) -> jax.Array:
+    """Gathered neighbor weights with ids ``>= n_valid`` zeroed (bucket
+    padding). Operates on the (B, k) query slice — never on the full
+    (capacity, k) graph — so the request-path cost stays O(B·k).
+    ``n_valid=None`` (no padding) returns the weights untouched."""
+    if n_valid is None:
+        return w
+    return jnp.where(idx < n_valid, w, 0.0)
 
 
 def _topk_neighbors(sim_row: jax.Array, self_idx: jax.Array, k: int):
@@ -143,6 +158,8 @@ def recommend_topn_graph(
     ratings: jax.Array,  # (U, P), 0 == missing
     users: jax.Array,  # (B,) query user ids
     n: int = 10,
+    *,
+    n_valid=None,  # () int32: rows >= n_valid are bucket padding
 ):
     """Top-N unseen items per query user — the serve-path recommendation op.
 
@@ -151,11 +168,12 @@ def recommend_topn_graph(
     (B, n). Cold rows (all weights 0) fall back to the user mean, so ranking
     degrades to arbitrary-but-finite rather than NaN. A user with fewer than
     ``n`` unrated items gets id -1 / score -inf in the exhausted slots — a
-    rated item is never returned.
+    rated item is never returned. ``n_valid`` zeroes padded-row neighbor
+    weights (see module docstring).
     """
     mask, means, centered = _center(ratings)
     idx = graph.indices[users]  # (B, k)
-    w = graph.weights[users].astype(centered.dtype)
+    w = _mask_padded_rows(idx, graph.weights[users], n_valid).astype(centered.dtype)
     preds = _block_predict(idx, w, centered, mask, means[users])  # (B, P)
     preds = jnp.where(mask[users] > 0, -jnp.inf, preds)  # never re-recommend
     scores, items = jax.lax.top_k(preds, n)
@@ -169,12 +187,18 @@ def predict_pairs_graph(
     ratings: jax.Array,
     users: jax.Array,  # (B,) query user ids
     items: jax.Array,  # (B,) query item ids
+    *,
+    n_valid=None,  # () int32: rows >= n_valid are bucket padding
 ) -> jax.Array:
-    """``predict_pairs`` from a NeighborGraph — no (U, U) array anywhere."""
+    """``predict_pairs`` from a NeighborGraph — no (U, U) array anywhere.
+
+    ``n_valid`` zeroes padded-row neighbor weights (see module docstring).
+    """
     mask, means, _ = _center(ratings)
+    idx_b = graph.indices[users]  # (B, k)
+    w_b = _mask_padded_rows(idx_b, graph.weights[users], n_valid)
 
-    def one(u, v):
-        return _pair_predict(graph.indices[u], graph.weights[u], u, v,
-                             ratings, mask, means)
+    def one(idx, w, u, v):
+        return _pair_predict(idx, w, u, v, ratings, mask, means)
 
-    return jax.vmap(one)(users, items)
+    return jax.vmap(one)(idx_b, w_b, users, items)

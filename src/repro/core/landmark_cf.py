@@ -154,12 +154,18 @@ def fold_in(
     )
 
 
-def predict(state: LandmarkState, users: jax.Array, items: jax.Array, spec: LandmarkSpec):
-    """Predict the requested (row, col) cells of the oriented matrix."""
+def predict(state: LandmarkState, users: jax.Array, items: jax.Array,
+            spec: LandmarkSpec, *, n_valid=None):
+    """Predict the requested (row, col) cells of the oriented matrix.
+
+    ``n_valid`` (graph path only) marks rows >= n_valid as bucket padding —
+    their neighbor weights are zeroed inside Eq. (1); see lifecycle.buckets.
+    """
     if spec.mode == "item":
         users, items = items, users
     if state.graph is not None:
-        return knn.predict_pairs_graph(state.graph, state.ratings, users, items)
+        return knn.predict_pairs_graph(state.graph, state.ratings, users, items,
+                                       n_valid=n_valid)
     return knn.predict_pairs(state.sims, state.ratings, users, items, k=spec.k_neighbors)
 
 

@@ -2,21 +2,31 @@
 
 - ``lm`` (default): prefill + batched decode with the exact or landmark KV
   path.  ``python -m repro.launch.serve --arch smollm-360m --smoke --tokens 16``
-- ``cf``: the landmark-CF lifecycle (docs/serving.md) — load a fitted
+- ``cf``: the landmark-CF serve loop (docs/serving.md) — load a fitted
   ``LandmarkState`` artifact (fit + checkpoint one in-process when the
   directory is empty), run warm jitted ``predict_pairs_graph`` / top-N
   recommendation waves, and apply ``fold_in`` batches between waves.
   ``python -m repro.launch.serve --workload cf --smoke``
+- ``cf --lifecycle``: the full continual-serving loop (docs/lifecycle.md) —
+  replay a drifting arrival stream (``data.synthetic.drifting_ratings``)
+  through bucket-padded executables (``repro.lifecycle.buckets``), online
+  drift monitoring (holdout-MAE reservoir, fold-in volume, landmark
+  coverage), and policy-triggered background landmark refresh with an atomic
+  generation-stamped artifact swap.
+  ``python -m repro.launch.serve --workload cf --lifecycle --smoke``
 
-CF latency is reported per wave as p50/p95 over the timed request loop.
-Fold-in changes U, so the first request after it recompiles the step; the
-wave loop re-warms before timing (a production deployment would pad U to
-bucket sizes to keep one executable — see docs/serving.md).
+CF latency is reported per wave as p50/p95 over the timed request loop. In
+plain ``cf`` mode fold-in changes U, so the first request after it recompiles
+the step and the wave loop re-warms before timing; ``--lifecycle`` is the
+production answer — U (and the fold-in batch) are padded to a geometric bucket
+schedule, so each jitted step compiles once per bucket and the replay reports
+the recompile count to prove it.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import tempfile
 import time
 
@@ -192,6 +202,243 @@ def _serve_cf(args):
     print("cf serve: done")
 
 
+# -------------------------------------------------------------- cf lifecycle
+def _timed_requests(bst, rng, args):
+    """One request wave against a BucketedState: warm (a cache hit except on
+    bucket growth), then time per jitted call. Returns (pair_ts, topn_ts)."""
+    from repro.lifecycle import buckets
+
+    u = int(bst.n_valid)
+    p = bst.state.ratings.shape[1]
+
+    def pair_batch():
+        users = jnp.asarray(rng.integers(0, u, args.batch).astype(np.int32))
+        items = jnp.asarray(rng.integers(0, p, args.batch).astype(np.int32))
+        return users, items
+
+    users, items = pair_batch()
+    jax.block_until_ready(buckets.predict_pairs(bst, users, items))
+    jax.block_until_ready(buckets.recommend_topn(bst, users, n=args.topn))
+    pair_ts, topn_ts = [], []
+    for _ in range(args.requests):
+        users, items = pair_batch()
+        t0 = time.perf_counter()
+        out = buckets.predict_pairs(bst, users, items)
+        jax.block_until_ready(out)
+        pair_ts.append(time.perf_counter() - t0)
+    if not bool(jnp.isfinite(out).all()):
+        raise RuntimeError("non-finite predictions in lifecycle wave")
+    for _ in range(max(1, args.requests // 4)):
+        users, _ = pair_batch()
+        t0 = time.perf_counter()
+        items_r, _ = buckets.recommend_topn(bst, users, n=args.topn)
+        jax.block_until_ready(items_r)
+        topn_ts.append(time.perf_counter() - t0)
+    return pair_ts, topn_ts
+
+
+def _withhold(rng, batch, frac):
+    """Split an arrival block into (train, holdout triples): each rated entry
+    is withheld with probability ``frac`` (zeroed in the train block)."""
+    rated = batch != 0
+    hold = rated & (rng.random(batch.shape) < frac)
+    rows, cols = np.nonzero(hold)
+    train = batch * ~hold
+    return train.astype(np.float32), rows.astype(np.int32), \
+        cols.astype(np.int32), batch[rows, cols].astype(np.float32)
+
+
+def _serve_cf_lifecycle(args):
+    """Replay a drifting stream through the fit→serve→monitor→refresh loop."""
+    from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
+    from repro.core import LandmarkSpec, RatingMatrix, fit, knn
+    from repro.data.synthetic import drifting_ratings
+    from repro.lifecycle import buckets, monitor, policy
+    from repro.lifecycle.monitor import _holdout_stats
+    from repro.lifecycle.refresh import RefreshManager
+    from repro.train.checkpoint import (latest_step, load_landmark_state,
+                                        save_landmark_state)
+
+    arch = registry.get("landmark_cf")
+    spec: LandmarkSpec = arch.smoke_model if args.smoke else arch.model
+    # Landmark refresh only helps if reselection can *move* the landmarks to
+    # the drifted population; coresets (diversity-seeking) does, popularity
+    # (count-ranked, ties to the incumbents) provably does not — measured in
+    # benchmarks.run refresh_vs_refit and docs/lifecycle.md.
+    spec = dataclasses.replace(spec, selection=args.selection)
+    rspec = SMOKE_REFRESH if args.smoke else REFRESH
+    if args.smoke:
+        args.users, args.items = min(args.users, 256), min(args.items, 96)
+        args.waves = min(args.waves, 8)
+        args.arrivals = min(args.arrivals, 48)
+        args.requests = min(args.requests, 8)
+        args.batch = min(args.batch, 128)
+        args.foldin = min(args.foldin, 32)
+        args.min_bucket = min(args.min_bucket, 256)
+
+    stream = dict(n_waves=args.waves, drift=args.drift)
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="cf_lifecycle_")
+    rng = np.random.default_rng(0)
+    bq = args.foldin  # fold-in batch bucket: b is padded to this, always
+
+    # request-path executables: counted as deltas over this replay, so a warm
+    # jit cache (e.g. pytest running other cases first) cannot skew the report
+    families = {
+        "pair": knn.predict_pairs_graph,
+        "topn": knn.recommend_topn_graph,
+        "fold": buckets.fold_in_bucketed,
+        "holdout": _holdout_stats,
+    }
+    cache0 = {name: fn._cache_size() for name, fn in families.items()}
+
+    # ---- base generation: fit on the wave-0 population, commit, bucket -----
+    # a reused --ckpt dir keeps earlier runs' committed steps; namespace this
+    # run's generations above them so latest_step stays this run's artifact
+    prev = latest_step(ckpt_dir)
+    gen0 = prev + 1 if prev is not None else 0
+    r0 = drifting_ratings(0, 0, args.users, args.items, **stream)
+    t0 = time.perf_counter()
+    st = fit(jax.random.PRNGKey(0),
+             RatingMatrix(jnp.asarray(r0), args.users, args.items), spec)
+    jax.block_until_ready(st.graph.weights)
+    save_landmark_state(ckpt_dir, st, step=gen0)
+    base_cov = float(monitor.batch_coverage(
+        st.representation, jnp.ones(args.users)))
+    bst = buckets.from_state(st, args.min_bucket, args.growth)
+    caps_used = {bst.capacity}
+    mon = monitor.init_monitor(rspec.reservoir, args.users, base_cov)
+    pol = policy.PolicyState(generation=gen0)
+    manager = RefreshManager(ckpt_dir, spec)
+    pending = None  # (generation, snapshot rows) of the refit in flight
+    last_refit = None  # same, for the committed generation (oracle check)
+    swap_wave = pre_post = None
+    print(f"gen {gen0}: fit U={args.users} P={args.items} n={spec.n_landmarks} "
+          f"k={st.graph.k} in {(time.perf_counter()-t0)*1e3:.0f}ms, bucket "
+          f"{bst.capacity} (schedule: min={args.min_bucket} x{args.growth:g}) "
+          f"-> {ckpt_dir}")
+
+    res_batch = rspec.reservoir  # fixed reservoir-offer shape: one executable
+    keyseq = iter(jax.random.split(jax.random.PRNGKey(42), 2 * args.waves + 8))
+    for wave in range(args.waves):
+        pair_ts, topn_ts = _timed_requests(bst, rng, args)
+        p50, p95 = _percentiles(pair_ts)
+        t50, t95 = _percentiles(topn_ts)
+
+        # ---- arrivals: withhold holdout ratings, fold the rest in ----------
+        if wave + 1 < args.waves:
+            arr = drifting_ratings(0, wave + 1, args.arrivals, args.items,
+                                   **stream)
+            train, hrows, hcols, hvals = _withhold(rng, arr, rspec.holdout_frac)
+            start_id = int(bst.n_valid)  # arrival i becomes row start_id + i
+            bst = buckets.fold_in_rows(bst, train, bq, spec,
+                                       args.min_bucket, args.growth)
+            caps_used.add(bst.capacity)
+            rep_rows = bst.state.representation[start_id:start_id + len(train)]
+            mon = monitor.observe_fold_in(mon, rep_rows, jnp.int32(len(train)))
+            # offer the withheld triples to the reservoir (fixed shape)
+            if len(hrows) > res_batch:
+                pick = rng.choice(len(hrows), res_batch, replace=False)
+                hrows, hcols, hvals = hrows[pick], hcols[pick], hvals[pick]
+            hu = np.zeros(res_batch, np.int32)
+            hi = np.zeros(res_batch, np.int32)
+            hr = np.zeros(res_batch, np.float32)
+            hu[:len(hrows)] = start_id + hrows
+            hi[:len(hrows)] = hcols
+            hr[:len(hrows)] = hvals
+            mon = monitor.reservoir_add(mon, next(keyseq), jnp.asarray(hu),
+                                        jnp.asarray(hi), jnp.asarray(hr),
+                                        jnp.int32(len(hrows)))
+
+        # ---- drift detection + refresh decision ----------------------------
+        snap = monitor.holdout_snapshot(mon, bst)
+        if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
+            pol.base_mae = snap.mae  # post-fit baseline, first healthy holdout
+        fire, reasons = policy.decide(pol, rspec, snap)
+        if fire:
+            gen = pol.generation + 1
+            rows = np.asarray(bst.state.ratings)[:int(bst.n_valid)]
+            # request() declines while the previous refit thread is still
+            # winding down; keep the streak and retry next wave instead of
+            # marking a refresh that never launched
+            if manager.request(rows, gen):
+                policy.on_fire(pol)
+                pending = (gen, rows)
+                print(f"wave {wave}: gen {pol.generation} refresh -> gen {gen} "
+                      f"launched in background ({'; '.join(reasons)})")
+
+        # ---- poll the background refit; swap atomically when committed -----
+        done = manager.poll()
+        if done is None and wave == args.waves - 1 and manager.busy:
+            manager.join()  # drain so the replay always reports the swap
+            done = manager.poll()
+        if done is not None:
+            gen, st_new = done
+            mae_pre = snap.mae  # nothing touched mon/bst since the snapshot
+            snap_u = st_new.ratings.shape[0]
+            cur_n = int(bst.n_valid)
+            new_bst = buckets.from_state(st_new, args.min_bucket, args.growth)
+            # users folded while the refit ran: fold the delta into the new gen
+            delta = np.asarray(bst.state.ratings)[snap_u:cur_n]
+            bst = buckets.fold_in_rows(new_bst, delta, bq, spec,
+                                       args.min_bucket, args.growth)
+            caps_used.add(bst.capacity)
+            new_cov = float(monitor.batch_coverage(
+                st_new.representation, jnp.ones(snap_u)))
+            mon = monitor.rebase(mon, int(bst.n_valid), new_cov)
+            snap, reasons = monitor.holdout_snapshot(mon, bst), []
+            mae_post = snap.mae
+            policy.on_swap(pol, gen, mae_post, rspec)
+            last_refit = pending
+            pending = None
+            swap_wave, pre_post = wave, (mae_pre, mae_post)
+            print(f"wave {wave}: swapped in gen {gen} (U={snap_u}+{len(delta)} "
+                  f"delta, serving uninterrupted) holdout MAE "
+                  f"{mae_pre:.4f} -> {mae_post:.4f}")
+
+        print(f"wave {wave}: gen {pol.generation} U={int(bst.n_valid)}"
+              f"/cap{bst.capacity} predict {args.requests}x{args.batch} pairs "
+              f"p50={p50:.2f}ms p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
+              f"p95={t95:.2f}ms | mae={snap.mae:.4f} cov={snap.coverage_ratio:.2f} "
+              f"fold={snap.foldin_frac:.2f}"
+              + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
+
+    # ---- replay report: recompiles, swap latency, oracle-exactness ---------
+    counts = {name: fn._cache_size() - cache0[name]
+              for name, fn in families.items()}
+    print(f"executables per request-path family: {counts} "
+          f"(buckets used: {sorted(caps_used)})")
+    worst = max(counts.values())
+    assert worst <= len(caps_used), (
+        f"recompile count {counts} exceeds bucket count {len(caps_used)} — "
+        "the bucketed steps must compile once per bucket, not per fold-in")
+    if pre_post is not None:
+        mae_pre, mae_post = pre_post
+        print(f"refresh: fired gen {pol.generation} at wave {swap_wave}, "
+              f"holdout MAE {mae_pre:.4f} -> {mae_post:.4f}")
+        assert mae_post <= mae_pre + 1e-6, (
+            "refresh must not degrade holdout MAE on the drifting stream")
+        # oracle: the served artifact is byte-equal to a from-scratch fit on
+        # the accumulated matrix (checkpoint round-trip included)
+        gen, rows = last_refit
+        loaded = load_landmark_state(ckpt_dir, step=gen)
+        assert latest_step(ckpt_dir) == gen, (latest_step(ckpt_dir), gen)
+        oracle = fit(jax.random.PRNGKey(gen),
+                     RatingMatrix(jnp.asarray(rows), *rows.shape), spec)
+        exact = (np.array_equal(np.asarray(loaded.graph.indices),
+                                np.asarray(oracle.graph.indices))
+                 and np.array_equal(np.asarray(loaded.graph.weights),
+                                    np.asarray(oracle.graph.weights)))
+        print(f"swap oracle-exact vs from-scratch fit (gen {gen}): {exact}")
+        assert exact, "swapped artifact diverged from a from-scratch fit"
+    else:
+        print("refresh: never fired (stream did not drift past thresholds)")
+        if args.smoke:
+            raise AssertionError(
+                "smoke lifecycle replay must exercise a refresh; "
+                "tune --drift/--waves or the smoke RefreshSpec")
+    print("cf lifecycle: done")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=("lm", "cf"), default="lm")
@@ -211,12 +458,31 @@ def main(argv=None):
                     "default: fresh temp dir)")
     ap.add_argument("--users", type=int, default=8192)
     ap.add_argument("--items", type=int, default=512)
-    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--waves", type=int, default=None,
+                    help="cf: request waves (default 3; lifecycle default 8)")
     ap.add_argument("--requests", type=int, default=32,
                     help="cf: timed predict calls per wave")
     ap.add_argument("--foldin", type=int, default=64,
-                    help="cf: new users folded in between waves")
+                    help="cf: new users folded in between waves; in "
+                    "--lifecycle mode, the fold-in batch bucket size")
     ap.add_argument("--topn", type=int, default=10)
+    # cf --lifecycle flags
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="cf: replay a drifting stream through the bucketed "
+                    "fit->serve->monitor->refresh loop (docs/lifecycle.md)")
+    ap.add_argument("--arrivals", type=int, default=64,
+                    help="lifecycle: new users arriving per wave")
+    ap.add_argument("--min-bucket", type=int, default=256,
+                    help="lifecycle: smallest capacity on the bucket schedule")
+    ap.add_argument("--growth", type=float, default=2.0,
+                    help="lifecycle: geometric bucket growth factor")
+    ap.add_argument("--drift", type=float, default=1.0,
+                    help="lifecycle: preference drift strength of the stream")
+    ap.add_argument("--selection", default="coresets",
+                    choices=("random", "dist_ratings", "coresets",
+                             "coresets_random", "popularity"),
+                    help="lifecycle: landmark selection for fit AND refresh "
+                    "(coresets: reselection follows the drifted population)")
     ap.add_argument("--compact", action="store_true",
                     help="cf: store the artifact as uint16 ids + bf16 weights")
     ap.add_argument("--graph-backend", default="auto",
@@ -224,9 +490,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.batch is None:
         args.batch = 256 if args.workload == "cf" else 4
+    if args.waves is None:
+        args.waves = 8 if args.lifecycle else 3
+    args.requests = max(1, args.requests)  # the wave loops time at least one
 
     if args.workload == "cf":
-        _serve_cf(args)
+        _serve_cf_lifecycle(args) if args.lifecycle else _serve_cf(args)
     else:
         _serve_lm(args)
 

@@ -1,0 +1,65 @@
+"""Continual-serving lifecycle: fit → serve → monitor → refresh, closed.
+
+The paper's pitch is that landmarks make the similarity structure cheap enough
+to *rebuild*; this package is the production loop that actually rebuilds it:
+
+- ``buckets``  — capacity-padded :class:`BucketedState` so the jitted serve
+  steps compile once per geometric bucket, not once per fold-in.
+- ``monitor``  — jittable running stats from served traffic (holdout MAE/RMSE
+  reservoir, fold-in volume, landmark coverage of arrivals).
+- ``policy``   — :class:`RefreshSpec` thresholds + hysteresis turning those
+  stats into refresh decisions.
+- ``refresh``  — :class:`RefreshManager`, the background refit + atomic
+  artifact swap (monotone generation numbers via ``train.checkpoint``).
+
+``launch/serve.py --workload cf --lifecycle`` drives the whole loop against a
+drifting synthetic stream (``data.synthetic.drifting_ratings``); see
+docs/lifecycle.md.
+"""
+from .buckets import (
+    BucketedState,
+    bucket_capacity,
+    bucket_schedule,
+    ensure_capacity,
+    fold_in_bucketed,
+    fold_in_rows,
+    from_state,
+    predict_pairs,
+    recommend_topn,
+)
+from .monitor import (
+    MonitorState,
+    Snapshot,
+    batch_coverage,
+    holdout_snapshot,
+    init_monitor,
+    observe_fold_in,
+    rebase,
+    reservoir_add,
+)
+from .policy import PolicyState, RefreshSpec, decide
+from .refresh import RefreshManager
+
+__all__ = [
+    "BucketedState",
+    "bucket_capacity",
+    "bucket_schedule",
+    "ensure_capacity",
+    "fold_in_bucketed",
+    "fold_in_rows",
+    "from_state",
+    "predict_pairs",
+    "recommend_topn",
+    "MonitorState",
+    "Snapshot",
+    "batch_coverage",
+    "holdout_snapshot",
+    "init_monitor",
+    "observe_fold_in",
+    "rebase",
+    "reservoir_add",
+    "PolicyState",
+    "RefreshSpec",
+    "decide",
+    "RefreshManager",
+]

@@ -1,0 +1,206 @@
+"""Bucket-padded serving state — one executable per bucket, not per fold-in.
+
+``fold_in`` grows U by b every call, so every request step after it recompiles
+(new shapes). This module removes that: arrays are padded to a capacity drawn
+from a geometric schedule, the live-row count ``n_valid`` is a *traced* scalar,
+and fold-in fills padded slots in place (``extend_neighbor_graph_bucketed``).
+The jitted pair/top-N/fold steps therefore compile once per bucket; shapes only
+change when the population outgrows its bucket.
+
+Correctness of the padding rests on two invariants, both property-tested
+(tests/test_properties.py, tests/test_lifecycle.py):
+
+- rows ``< n_valid`` of the padded graph reference only rows ``< n_valid``;
+- rows ``>= n_valid`` hold (index 0, weight 0.0) — inert under Eq. (1).
+
+On top of that, every consumer (``knn.predict_pairs_graph``,
+``knn.recommend_topn_graph``) re-zeroes weights of out-of-range neighbor ids
+via ``n_valid``, so padded rows cannot leak into predictions or
+recommendations even from a corrupted artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knn
+from repro.core.graph import extend_neighbor_graph_bucketed
+from repro.core.landmark_cf import LandmarkState
+from repro.core.similarity import masked_similarity
+from repro.core.types import LandmarkSpec, NeighborGraph
+
+DEFAULT_MIN_BUCKET = 256
+DEFAULT_GROWTH = 2.0
+
+
+def bucket_schedule(max_size: int, min_bucket: int = DEFAULT_MIN_BUCKET,
+                    growth: float = DEFAULT_GROWTH) -> List[int]:
+    """Geometric capacities ``min_bucket * growth^i`` (rounded up to 8) that
+    cover populations up to ``max_size``."""
+    assert growth > 1.0, growth
+    caps, cap = [], float(min_bucket)
+    while True:
+        c = -(-int(cap) // 8) * 8
+        if not caps or c > caps[-1]:
+            caps.append(c)
+        if c >= max_size:
+            return caps
+        cap *= growth
+
+
+def bucket_capacity(n: int, min_bucket: int = DEFAULT_MIN_BUCKET,
+                    growth: float = DEFAULT_GROWTH) -> int:
+    """Smallest capacity on the schedule that holds ``n`` rows."""
+    return bucket_schedule(n, min_bucket, growth)[-1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BucketedState:
+    """A ``LandmarkState`` padded to a bucket capacity + its live-row count.
+
+    ``state`` arrays have leading dimension ``capacity``; rows ``< n_valid``
+    are real users, the rest zero filler. The whole thing is a pytree, so the
+    jitted serve/fold steps take it directly; ``n_valid`` is a traced leaf —
+    fill level never triggers a recompile.
+    """
+
+    state: LandmarkState
+    n_valid: jax.Array  # () int32
+
+    def tree_flatten(self):
+        return (self.state, self.n_valid), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.state.ratings.shape[0]
+
+
+def _pad_rows(x: jax.Array, capacity: int) -> jax.Array:
+    pad = capacity - x.shape[0]
+    assert pad >= 0, (x.shape, capacity)
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
+
+
+def _pad_state(state: LandmarkState, capacity: int) -> LandmarkState:
+    """Zero-pad every user-indexed array to ``capacity`` rows.
+
+    Zero filler is inert by construction: zero rating rows have mask 0 and
+    mean 0, zero graph rows have weight 0.
+    """
+    if state.graph is None:
+        raise ValueError("bucketed serving needs a graph-backed state; "
+                         "dense-sims states must refit")
+    graph = state.graph.to_full() if state.graph.is_compact else state.graph
+    return LandmarkState(
+        state.landmark_idx,
+        _pad_rows(state.representation, capacity),
+        _pad_rows(state.ratings, capacity),
+        graph=NeighborGraph(_pad_rows(graph.indices, capacity),
+                            _pad_rows(graph.weights, capacity)),
+    )
+
+
+def from_state(state: LandmarkState, min_bucket: int = DEFAULT_MIN_BUCKET,
+               growth: float = DEFAULT_GROWTH) -> BucketedState:
+    """Wrap a fitted state into the smallest bucket that holds it."""
+    u = state.ratings.shape[0]
+    cap = bucket_capacity(u, min_bucket, growth)
+    return BucketedState(_pad_state(state, cap), jnp.int32(u))
+
+
+def ensure_capacity(bstate: BucketedState, incoming: int,
+                    min_bucket: int = DEFAULT_MIN_BUCKET,
+                    growth: float = DEFAULT_GROWTH) -> Tuple[BucketedState, bool]:
+    """Host-side growth check before a fold-in of ``incoming`` rows.
+
+    Returns ``(state, grew)``; when the bucket overflows, arrays are re-padded
+    to the next capacity on the schedule (the one deliberate recompile).
+    """
+    need = int(bstate.n_valid) + incoming
+    if need <= bstate.capacity:
+        return bstate, False
+    cap = bucket_capacity(need, min_bucket, growth)
+    return BucketedState(_pad_state(bstate.state, cap), bstate.n_valid), True
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def fold_in_bucketed(
+    bstate: BucketedState,
+    new_ratings: jax.Array,  # (bq, P) batch bucket; rows >= b_valid are filler
+    b_valid: jax.Array,  # () int32 real rows in the batch
+    spec: LandmarkSpec,
+) -> BucketedState:
+    """Shape-stable ``fold_in``: fill padded slots instead of growing arrays.
+
+    Same math as :func:`repro.core.landmark_cf.fold_in` (d1 through the frozen
+    landmarks, new-vs-all scan, back-patch) restricted to the valid prefix;
+    see ``extend_neighbor_graph_bucketed`` for the masking. The caller must
+    guarantee ``n_valid + bq <= capacity`` (``ensure_capacity``). Compiles
+    once per (capacity, bq) pair.
+    """
+    st = bstate.state
+    n_valid = bstate.n_valid
+    bq = new_ratings.shape[0]
+    q_valid = (jnp.arange(bq) < b_valid)[:, None]
+    new_ratings = jnp.where(q_valid, new_ratings, 0.0)
+
+    landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen at fit: ids < U0
+    new_rep = masked_similarity(new_ratings, landmarks, spec.d1)  # (bq, n)
+    new_rep = jnp.where(q_valid, new_rep, 0.0)
+
+    ratings = jax.lax.dynamic_update_slice(st.ratings, new_ratings, (n_valid, 0))
+    rep = jax.lax.dynamic_update_slice(st.representation, new_rep, (n_valid, 0))
+    graph = extend_neighbor_graph_bucketed(st.graph, rep, new_rep,
+                                           n_valid, b_valid, spec.d2)
+    return BucketedState(
+        LandmarkState(st.landmark_idx, rep, ratings, graph=graph),
+        n_valid + b_valid.astype(jnp.int32),
+    )
+
+
+def fold_in_rows(bstate: BucketedState, rows, bq: int, spec: LandmarkSpec,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 growth: float = DEFAULT_GROWTH) -> BucketedState:
+    """Host-side fold-in driver: reserve capacity, then fold ``rows`` through
+    the jitted step in ``bq``-sized padded batches.
+
+    Capacity is reserved for the *padded* batches (``ceil(len/bq) * bq``): a
+    ragged last chunk still writes ``bq`` rows, and the in-place
+    ``dynamic_update_slice`` must never clamp against the capacity edge —
+    that would overwrite valid rows with filler. This is the one place that
+    contract lives; serve, swap-delta refold, and benchmarks all come through
+    here.
+    """
+    n = len(rows)
+    bstate, _ = ensure_capacity(bstate, -(-n // bq) * bq if n else 0,
+                                min_bucket, growth)
+    p = bstate.state.ratings.shape[1]
+    rows = jnp.asarray(rows)
+    for lo in range(0, n, bq):
+        chunk = rows[lo:lo + bq]
+        m = chunk.shape[0]
+        padded = jnp.zeros((bq, p), jnp.float32).at[:m].set(chunk)
+        bstate = fold_in_bucketed(bstate, padded, jnp.int32(m), spec)
+    return bstate
+
+
+def predict_pairs(bstate: BucketedState, users: jax.Array, items: jax.Array
+                  ) -> jax.Array:
+    """Serve-path pair predictions with the padded-row mask threaded through."""
+    return knn.predict_pairs_graph(bstate.state.graph, bstate.state.ratings,
+                                   users, items, n_valid=bstate.n_valid)
+
+
+def recommend_topn(bstate: BucketedState, users: jax.Array, n: int = 10):
+    """Serve-path top-N with the padded-row mask threaded through."""
+    return knn.recommend_topn_graph(bstate.state.graph, bstate.state.ratings,
+                                    users, n=n, n_valid=bstate.n_valid)

@@ -1,0 +1,189 @@
+"""Online drift monitoring from served traffic — a jittable running-stats pytree.
+
+Three signals, all cheap enough to update on the serve path:
+
+- **holdout MAE/RMSE** — a reservoir (Vitter's algorithm R, jittable) of
+  ratings withheld from fold-in batches; ``holdout_snapshot`` scores them with
+  the current artifact. Rising MAE against the post-(re)fit baseline is the
+  paper-faithful drift signal: fold-in projects through *frozen* landmarks, so
+  representation quality decays as the population drifts away from them.
+- **fold-in volume fraction** — folded rows / total rows since the last
+  (re)fit. High volume means most of the graph was built by fold-in, not fit.
+- **landmark coverage** — EWMA over arrival batches of each new user's best
+  |d1| similarity to any landmark. Arrivals the landmarks cannot "see"
+  (few co-rated items) get poor representations before they get poor MAE —
+  coverage is the leading indicator, MAE the lagging one.
+
+``policy.decide`` turns a :class:`Snapshot` of these into a refresh decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knn
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MonitorState:
+    """Running serving stats. All leaves are arrays — updates jit end-to-end."""
+
+    res_users: jax.Array  # (R,) int32 withheld (user, item, rating) triples
+    res_items: jax.Array  # (R,) int32
+    res_ratings: jax.Array  # (R,) float32
+    res_filled: jax.Array  # () int32 occupied reservoir slots
+    res_seen: jax.Array  # () int32 triples ever offered (algorithm-R denom)
+    n_base: jax.Array  # () int32 rows at the last (re)fit
+    n_folded: jax.Array  # () int32 rows folded in since
+    coverage: jax.Array  # () f32 EWMA of arrival landmark coverage
+    base_coverage: jax.Array  # () f32 coverage measured right after (re)fit
+
+    def tree_flatten(self):
+        return (self.res_users, self.res_items, self.res_ratings,
+                self.res_filled, self.res_seen, self.n_base, self.n_folded,
+                self.coverage, self.base_coverage), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def reservoir_size(self) -> int:
+        return self.res_users.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Host-side view of one monitoring step (inputs to ``policy.decide``)."""
+
+    mae: float
+    rmse: float
+    holdout_count: int
+    foldin_frac: float
+    coverage: float
+    coverage_ratio: float  # coverage / base_coverage
+
+
+def init_monitor(reservoir_size: int, n_base: int,
+                 base_coverage: float) -> MonitorState:
+    z = jnp.zeros((reservoir_size,), jnp.int32)
+    return MonitorState(
+        res_users=z, res_items=z,
+        res_ratings=jnp.zeros((reservoir_size,), jnp.float32),
+        res_filled=jnp.int32(0), res_seen=jnp.int32(0),
+        n_base=jnp.int32(n_base), n_folded=jnp.int32(0),
+        coverage=jnp.float32(base_coverage),
+        base_coverage=jnp.float32(base_coverage),
+    )
+
+
+@jax.jit
+def batch_coverage(rep: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mean over valid rows of the best |d1| similarity to any landmark.
+
+    ``rep`` is a (b, n) landmark representation, ``valid`` a (b,) bool/0-1
+    mask. A row with no co-rated items against every landmark scores 0 — the
+    landmarks cannot see that user at all.
+    """
+    best = jnp.max(jnp.abs(rep), axis=1)  # (b,)
+    v = valid.astype(jnp.float32)
+    return jnp.sum(best * v) / jnp.maximum(jnp.sum(v), 1.0)
+
+
+@jax.jit
+def observe_fold_in(mon: MonitorState, new_rep: jax.Array, b_valid: jax.Array,
+                    alpha: float = 0.3) -> MonitorState:
+    """Fold one arrival batch into the volume + coverage stats (EWMA)."""
+    cov = batch_coverage(new_rep, jnp.arange(new_rep.shape[0]) < b_valid)
+    return dataclasses.replace(
+        mon,
+        n_folded=mon.n_folded + b_valid.astype(jnp.int32),
+        coverage=(1.0 - alpha) * mon.coverage + alpha * cov,
+    )
+
+
+@jax.jit
+def reservoir_add(mon: MonitorState, key: jax.Array, users: jax.Array,
+                  items: jax.Array, ratings: jax.Array, m_valid: jax.Array
+                  ) -> MonitorState:
+    """Algorithm-R reservoir sampling of withheld triples, fully jitted.
+
+    ``users/items/ratings`` are fixed-size batches; only the first ``m_valid``
+    entries are real. Every valid triple is offered; once the reservoir is
+    full, triple t replaces a uniform slot with probability R/t.
+    """
+    r_cap = mon.reservoir_size
+    b = users.shape[0]
+    keys = jax.random.split(key, b)
+
+    def step(carry, x):
+        ru, ri, rr, filled, seen = carry
+        u, i, r, k, valid = x
+        seen2 = seen + valid.astype(jnp.int32)
+        j = jax.random.randint(k, (), 0, jnp.maximum(seen2, 1))
+        slot = jnp.where(filled < r_cap, filled, j)
+        accept = valid & ((filled < r_cap) | (j < r_cap))
+        slot = jnp.where(accept, slot, r_cap)  # r_cap == out-of-bounds drop
+        ru = ru.at[slot].set(u, mode="drop")
+        ri = ri.at[slot].set(i, mode="drop")
+        rr = rr.at[slot].set(r, mode="drop")
+        filled = jnp.where(accept, jnp.minimum(filled + 1, r_cap), filled)
+        return (ru, ri, rr, filled, seen2), None
+
+    valid = jnp.arange(b) < m_valid
+    (ru, ri, rr, filled, seen), _ = jax.lax.scan(
+        step,
+        (mon.res_users, mon.res_items, mon.res_ratings,
+         mon.res_filled, mon.res_seen),
+        (users.astype(jnp.int32), items.astype(jnp.int32),
+         ratings.astype(jnp.float32), keys, valid),
+    )
+    return dataclasses.replace(mon, res_users=ru, res_items=ri, res_ratings=rr,
+                               res_filled=filled, res_seen=seen)
+
+
+@jax.jit
+def _holdout_stats(mon: MonitorState, graph, ratings, n_valid):
+    slot_valid = jnp.arange(mon.reservoir_size) < mon.res_filled
+    users = jnp.where(slot_valid, mon.res_users, 0)
+    items = jnp.where(slot_valid, mon.res_items, 0)
+    preds = knn.predict_pairs_graph(graph, ratings, users, items,
+                                    n_valid=n_valid)
+    err = (preds - mon.res_ratings) * slot_valid
+    cnt = jnp.maximum(jnp.sum(slot_valid.astype(jnp.float32)), 1.0)
+    mae = jnp.sum(jnp.abs(err)) / cnt
+    rmse = jnp.sqrt(jnp.sum(err * err) / cnt)
+    frac = mon.n_folded / jnp.maximum(mon.n_base + mon.n_folded, 1)
+    return mae, rmse, mon.res_filled, frac, mon.coverage, mon.base_coverage
+
+
+def holdout_snapshot(mon: MonitorState, bstate) -> Snapshot:
+    """Score the reservoir with the current artifact → host :class:`Snapshot`.
+
+    One executable per (reservoir, capacity) shape pair — evaluation shares
+    the bucket discipline of the serve path.
+    """
+    mae, rmse, cnt, frac, cov, base = _holdout_stats(
+        mon, bstate.state.graph, bstate.state.ratings, bstate.n_valid)
+    base = float(base)
+    return Snapshot(
+        mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),
+        foldin_frac=float(frac), coverage=float(cov),
+        coverage_ratio=float(cov) / max(base, 1e-9),
+    )
+
+
+def rebase(mon: MonitorState, n_base: int, base_coverage: float) -> MonitorState:
+    """Reset the per-generation stats after an artifact swap.
+
+    The reservoir is deliberately kept: pre- and post-refresh MAE are measured
+    on the same withheld set, so the swap's effect is directly comparable.
+    """
+    return dataclasses.replace(
+        mon, n_base=jnp.int32(n_base), n_folded=jnp.int32(0),
+        coverage=jnp.float32(base_coverage),
+        base_coverage=jnp.float32(base_coverage),
+    )

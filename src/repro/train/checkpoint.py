@@ -83,10 +83,18 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3,
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Highest *committed* step (== artifact generation for LandmarkStates).
+
+    A step counts only if its directory is past the atomic rename (no ``.tmp``
+    suffix) AND contains ``manifest.json`` — a partial dir left by a crash
+    between tensor writes and the sidecar/manifest commit is invisible here,
+    so restores always land on the previous committed generation.
+    """
     d = Path(directory)
     if not d.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*") if not p.name.endswith(".tmp")]
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
+             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
     return max(steps) if steps else None
 
 

@@ -1,0 +1,377 @@
+"""Continual-serving lifecycle subsystem (repro.lifecycle): bucketed
+executables, drift monitoring, refresh policy, background refresh + atomic
+artifact swap, and the drifting synthetic stream that exercises them.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LandmarkSpec, RatingMatrix, fit, fold_in, knn
+from repro.data.synthetic import drifting_ratings
+from repro.lifecycle import buckets, monitor, policy
+from repro.lifecycle.monitor import Snapshot
+from repro.lifecycle.refresh import RefreshManager
+from repro.train.checkpoint import (landmark_state_meta, latest_step,
+                                    load_landmark_state, save_landmark_state)
+
+SPEC = LandmarkSpec(n_landmarks=8, selection="popularity", k_neighbors=5)
+
+
+def _ratings(u, p, density=0.35, seed=0):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(1, 6, (u, p)).astype(np.float32)
+    r *= rng.random((u, p)) < density
+    return jnp.asarray(r)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    r = _ratings(120, 48, seed=1)
+    return fit(jax.random.PRNGKey(0), RatingMatrix(r, 120, 48), SPEC), r
+
+
+# ------------------------------------------------------------------- buckets
+
+
+def test_bucket_schedule_geometric_and_covering():
+    caps = buckets.bucket_schedule(5000, min_bucket=256, growth=2.0)
+    assert caps == [256, 512, 1024, 2048, 4096, 8192]
+    for n in (1, 255, 256, 257, 5000):
+        cap = buckets.bucket_capacity(n, 256, 2.0)
+        assert cap >= n and cap in buckets.bucket_schedule(max(n, 256), 256, 2.0)
+    # non-integer growth stays strictly increasing and 8-aligned
+    caps = buckets.bucket_schedule(1000, min_bucket=100, growth=1.3)
+    assert all(b > a for a, b in zip(caps, caps[1:]))
+    assert all(c % 8 == 0 for c in caps)
+
+
+def test_from_state_predictions_bit_identical(fitted):
+    st, _ = fitted
+    u, p = st.ratings.shape
+    bst = buckets.from_state(st, min_bucket=64, growth=2.0)
+    assert bst.capacity == 128 and int(bst.n_valid) == u
+    rng = np.random.default_rng(2)
+    users = jnp.asarray(rng.integers(0, u, 200).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, p, 200).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(buckets.predict_pairs(bst, users, items)),
+        np.asarray(knn.predict_pairs_graph(st.graph, st.ratings, users, items)))
+    gi, gs = buckets.recommend_topn(bst, users[:20], n=7)
+    wi, ws = knn.recommend_topn_graph(st.graph, st.ratings, users[:20], n=7)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def _padded_graph_invariants(bst):
+    """Valid rows reference only valid rows; padded rows are inert."""
+    n = int(bst.n_valid)
+    idx = np.asarray(bst.state.graph.indices)
+    w = np.asarray(bst.state.graph.weights)
+    assert ((idx[:n] < n) | (w[:n] == 0)).all(), "padded id leaked a weight"
+    assert (w[n:] == 0).all(), "padded row holds live weights"
+
+
+def test_fold_in_bucketed_matches_growing_fold_in(fitted):
+    st, _ = fitted
+    u, p = st.ratings.shape
+    new = _ratings(30, p, seed=3)
+    bst = buckets.from_state(st, min_bucket=64, growth=2.0)
+    # two bucketed folds (ragged second chunk) across a capacity growth
+    bst, grew = buckets.ensure_capacity(bst, 30, min_bucket=64, growth=2.0)
+    assert grew and bst.capacity == 256
+    for lo, hi in ((0, 16), (16, 30)):
+        padded = np.zeros((16, p), np.float32)
+        padded[:hi - lo] = np.asarray(new[lo:hi])
+        bst = buckets.fold_in_bucketed(bst, jnp.asarray(padded),
+                                       jnp.int32(hi - lo), SPEC)
+    assert int(bst.n_valid) == u + 30
+    _padded_graph_invariants(bst)
+
+    oracle = fold_in(st, new, SPEC, backend="streaming")
+    rng = np.random.default_rng(4)
+    users = jnp.asarray(rng.integers(0, u + 30, 300).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, p, 300).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(buckets.predict_pairs(bst, users, items)),
+        np.asarray(knn.predict_pairs_graph(oracle.graph, oracle.ratings,
+                                           users, items)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_fold_in_bucketed_compiles_once_per_bucket(fitted):
+    st, _ = fitted
+    p = st.ratings.shape[1]
+    bst = buckets.from_state(st, min_bucket=256, growth=2.0)
+    before = buckets.fold_in_bucketed._cache_size()
+    for m in (5, 16, 11, 16, 3):  # varying fill, fixed (capacity, bq) shapes
+        padded = np.zeros((16, p), np.float32)
+        padded[:m] = np.asarray(_ratings(m, p, seed=m))
+        bst = buckets.fold_in_bucketed(bst, jnp.asarray(padded),
+                                       jnp.int32(m), SPEC)
+    assert buckets.fold_in_bucketed._cache_size() - before <= 1
+    _padded_graph_invariants(bst)
+
+
+def test_bucketed_predictions_ignore_poisoned_padding(fitted):
+    """Even if padded graph rows point at real users with big weights, the
+    n_valid mask keeps them out of predictions AND no padded id can score."""
+    import dataclasses
+
+    from repro.core.types import NeighborGraph
+
+    st, _ = fitted
+    u, p = st.ratings.shape
+    bst = buckets.from_state(st, min_bucket=64, growth=2.0)
+    g = bst.state.graph
+    # poison: padded rows all point at user 0 with weight 9; a valid user's
+    # last neighbor slot points at a padded row with weight 9
+    idx = np.asarray(g.indices).copy()
+    w = np.asarray(g.weights).copy()
+    idx[u:], w[u:] = 0, 9.0
+    idx[3, -1], w[3, -1] = u + 1, 9.0
+    poisoned = dataclasses.replace(
+        bst, state=dataclasses.replace(
+            bst.state, graph=NeighborGraph(jnp.asarray(idx), jnp.asarray(w))))
+    users = jnp.asarray([3] * 8, np.int32)
+    items = jnp.arange(8, dtype=jnp.int32)
+    clean_w = np.asarray(g.weights).copy()
+    clean_w[3, -1] = 0.0  # the poisoned slot contributes nothing
+    clean = dataclasses.replace(
+        bst, state=dataclasses.replace(
+            bst.state,
+            graph=NeighborGraph(jnp.asarray(idx), jnp.asarray(clean_w))))
+    np.testing.assert_allclose(
+        np.asarray(buckets.predict_pairs(poisoned, users, items)),
+        np.asarray(buckets.predict_pairs(clean, users, items)),
+        rtol=1e-6, atol=1e-6)
+    gi, _ = buckets.recommend_topn(poisoned, users[:1], n=5)
+    assert (np.asarray(gi) < p).all()  # items, never user slots
+
+
+# ------------------------------------------------------------------- monitor
+
+
+def test_reservoir_fills_then_samples_bounded():
+    mon = monitor.init_monitor(32, n_base=100, base_coverage=1.0)
+    key = jax.random.PRNGKey(0)
+    for step in range(5):
+        users = jnp.arange(20, dtype=jnp.int32) + 100 * step
+        items = jnp.arange(20, dtype=jnp.int32)
+        ratings = jnp.full((20,), 3.0)
+        mon = monitor.reservoir_add(mon, jax.random.fold_in(key, step),
+                                    users, items, ratings, jnp.int32(20))
+    assert int(mon.res_filled) == 32  # capped at capacity
+    assert int(mon.res_seen) == 100  # but every offer was counted
+    # partial batches only offer the valid prefix
+    mon2 = monitor.init_monitor(32, 100, 1.0)
+    mon2 = monitor.reservoir_add(mon2, key, jnp.arange(20, dtype=jnp.int32),
+                                 jnp.arange(20, dtype=jnp.int32),
+                                 jnp.full((20,), 3.0), jnp.int32(7))
+    assert int(mon2.res_filled) == 7 and int(mon2.res_seen) == 7
+
+
+def test_monitor_coverage_and_volume_tracking(fitted):
+    st, _ = fitted
+    u = st.ratings.shape[0]
+    base = float(monitor.batch_coverage(st.representation, jnp.ones(u)))
+    assert 0.0 < base <= 1.0 + 1e-5
+    mon = monitor.init_monitor(16, u, base)
+    # a batch the landmarks cannot see at all: zero representation rows
+    dead = jnp.zeros((8, st.representation.shape[1]))
+    mon = monitor.observe_fold_in(mon, dead, jnp.int32(8), alpha=1.0)
+    assert float(mon.coverage) == 0.0
+    assert int(mon.n_folded) == 8
+    snap = monitor.holdout_snapshot(
+        mon, buckets.from_state(st, min_bucket=64, growth=2.0))
+    assert snap.coverage_ratio == 0.0
+    assert snap.foldin_frac == pytest.approx(8 / (u + 8))
+
+
+def test_holdout_snapshot_scores_reservoir(fitted):
+    st, r = fitted
+    u, p = st.ratings.shape
+    mon = monitor.init_monitor(64, u, 1.0)
+    rng = np.random.default_rng(0)
+    rows, cols = np.nonzero(np.asarray(r))
+    pick = rng.choice(len(rows), 40, replace=False)
+    mon = monitor.reservoir_add(
+        mon, jax.random.PRNGKey(1), jnp.asarray(rows[pick].astype(np.int32)),
+        jnp.asarray(cols[pick].astype(np.int32)),
+        jnp.asarray(np.asarray(r)[rows[pick], cols[pick]]), jnp.int32(40))
+    snap = monitor.holdout_snapshot(
+        mon, buckets.from_state(st, min_bucket=64, growth=2.0))
+    assert snap.holdout_count == 40
+    assert math.isfinite(snap.mae) and math.isfinite(snap.rmse)
+    assert 0 < snap.mae <= 4.0 and snap.rmse >= snap.mae - 1e-6
+
+
+# -------------------------------------------------------------------- policy
+
+
+def _snap(mae=1.0, cov=1.0, frac=0.0, count=100):
+    return Snapshot(mae=mae, rmse=mae, holdout_count=count, foldin_frac=frac,
+                    coverage=cov, coverage_ratio=cov)
+
+
+def test_policy_fires_only_after_patience():
+    spec = policy.RefreshSpec(patience=2, cooldown_waves=3, mae_ratio=1.1)
+    pol = policy.PolicyState(base_mae=1.0)
+    fire, reasons = policy.decide(pol, spec, _snap(mae=1.5))
+    assert not fire and reasons  # breach 1 of 2
+    fire, _ = policy.decide(pol, spec, _snap(mae=1.5))
+    assert fire
+    # a healthy wave resets the streak
+    pol2 = policy.PolicyState(base_mae=1.0)
+    policy.decide(pol2, spec, _snap(mae=1.5))
+    policy.decide(pol2, spec, _snap(mae=1.0))
+    fire, _ = policy.decide(pol2, spec, _snap(mae=1.5))
+    assert not fire and pol2.streak == 1
+
+
+def test_policy_cooldown_and_refreshing_suppress_fire():
+    spec = policy.RefreshSpec(patience=1, cooldown_waves=2, mae_ratio=1.1)
+    pol = policy.PolicyState(base_mae=1.0)
+    fire, _ = policy.decide(pol, spec, _snap(mae=2.0))
+    assert fire
+    policy.on_fire(pol)
+    assert not policy.decide(pol, spec, _snap(mae=2.0))[0]  # in flight
+    policy.on_swap(pol, 1, post_swap_mae=1.0, spec=spec)
+    assert pol.generation == 1 and pol.base_mae == 1.0
+    assert not policy.decide(pol, spec, _snap(mae=2.0))[0]  # cooldown 2
+    assert not policy.decide(pol, spec, _snap(mae=2.0))[0]  # cooldown 1
+    assert policy.decide(pol, spec, _snap(mae=2.0))[0]
+
+
+def test_policy_ignores_small_holdout_and_respects_other_signals():
+    spec = policy.RefreshSpec(patience=1, min_holdout=32, mae_ratio=1.1,
+                              min_coverage_ratio=0.8, max_foldin_frac=0.5)
+    pol = policy.PolicyState(base_mae=1.0)
+    assert not policy.decide(pol, spec, _snap(mae=9.0, count=10))[0]
+    assert policy.decide(pol, spec, _snap(cov=0.5))[0]
+    pol2 = policy.PolicyState()  # no MAE baseline yet: volume still fires
+    assert policy.decide(pol2, spec, _snap(frac=0.7))[0]
+
+
+# ------------------------------------------------------- refresh + checkpoint
+
+
+def test_refresh_manager_commits_oracle_exact_generation(tmp_path, fitted):
+    st, r = fitted
+    save_landmark_state(str(tmp_path), st, step=0)
+    acc = np.concatenate([np.asarray(r), np.asarray(_ratings(16, 48, seed=9))])
+    mgr = RefreshManager(str(tmp_path), SPEC)
+    assert mgr.request(acc, generation=1)
+    assert not mgr.request(acc, generation=2)  # one in flight
+    mgr.join()
+    gen, st_new = mgr.poll()
+    assert gen == 1 and mgr.poll() is None  # result delivered exactly once
+    assert latest_step(str(tmp_path)) == 1
+
+    oracle = fit(jax.random.PRNGKey(1),
+                 RatingMatrix(jnp.asarray(acc), *acc.shape), SPEC)
+    np.testing.assert_array_equal(np.asarray(st_new.graph.indices),
+                                  np.asarray(oracle.graph.indices))
+    np.testing.assert_array_equal(np.asarray(st_new.graph.weights),
+                                  np.asarray(oracle.graph.weights))
+    loaded = load_landmark_state(str(tmp_path))  # checkpoint round-trip exact
+    np.testing.assert_array_equal(np.asarray(loaded.graph.weights),
+                                  np.asarray(oracle.graph.weights))
+    np.testing.assert_array_equal(np.asarray(loaded.ratings), acc)
+
+    with pytest.raises(ValueError, match="generation must increase"):
+        mgr.request(acc, generation=1)
+
+
+def test_refresh_manager_surfaces_thread_errors(tmp_path):
+    mgr = RefreshManager(str(tmp_path), SPEC)
+    bad = np.zeros((0, 8), np.float32)  # empty population: fit must blow up
+    mgr.request(bad, generation=1)
+    mgr.join()
+    with pytest.raises(RuntimeError, match="background refresh failed"):
+        mgr.poll()
+
+
+def test_crashed_partial_checkpoint_is_invisible(tmp_path, fitted):
+    """Crash between tensor write and manifest/sidecar commit: the partial
+    step dir (both .tmp and a renamed-but-manifest-less one) must be ignored
+    and the previous committed generation must load."""
+    st, _ = fitted
+    save_landmark_state(str(tmp_path), st, step=3)
+    assert latest_step(str(tmp_path)) == 3
+
+    # crash flavor 1: tmp dir never renamed (tensors on disk, no commit)
+    tmp = tmp_path / "step_00000007.tmp"
+    (tmp / "leaf_0000").mkdir(parents=True)
+    np.save(tmp / "leaf_0000" / "shard_0000.npy", np.ones(4))
+    # crash flavor 2: dir renamed by hand / partial copy without a manifest
+    part = tmp_path / "step_00000009"
+    (part / "leaf_0000").mkdir(parents=True)
+    np.save(part / "leaf_0000" / "shard_0000.npy", np.ones(4))
+
+    assert latest_step(str(tmp_path)) == 3
+    assert landmark_state_meta(str(tmp_path))["kind"] == "landmark_state"
+    loaded = load_landmark_state(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(loaded.graph.indices),
+                                  np.asarray(st.graph.indices))
+
+
+# -------------------------------------------------------------- replay (e2e)
+
+
+def test_lifecycle_replay_end_to_end(tmp_path, capsys):
+    """Acceptance: the full loop on a drifting stream — bucketed executables
+    (compile count asserted ≤ bucket count inside serve), a fired refresh,
+    post-swap MAE ≤ pre-swap MAE, an oracle-exact generation-1 artifact, and
+    serving continuity across the swap (all asserted in the replay itself)."""
+    from repro.launch import serve
+
+    serve.main([
+        "--workload", "cf", "--lifecycle", "--smoke", "--ckpt", str(tmp_path),
+        "--users", "128", "--items", "64", "--waves", "6", "--arrivals", "32",
+        "--requests", "2", "--batch", "32", "--min-bucket", "128",
+    ])
+    out = capsys.readouterr().out
+    assert "cf lifecycle: done" in out
+    assert "refresh -> gen 1 launched in background" in out
+    assert "swapped in gen 1" in out
+    assert "swap oracle-exact vs from-scratch fit (gen 1): True" in out
+    assert "wave 5: gen 1" in out  # generation visible in wave logs
+    assert latest_step(str(tmp_path)) == 1  # committed generation on disk
+
+
+# ------------------------------------------------------------ drifting stream
+
+
+def test_drifting_ratings_deterministic_and_shaped():
+    a = drifting_ratings(7, 3, 20, 64, n_waves=6)
+    b = drifting_ratings(7, 3, 20, 64, n_waves=6)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (20, 64) and a.dtype == np.float32
+    assert set(np.unique(a)) <= set(range(6))  # 0 (missing) + ratings 1..5
+    assert (a != 0).mean() > 0.05  # stream actually rates things
+
+
+def test_drift_degrades_landmark_coverage():
+    """Landmarks fitted on wave 0 must see late waves worse than early ones —
+    the signal the lifecycle monitor thresholds on."""
+    from repro.core.similarity import masked_similarity
+
+    waves, p = 8, 96
+    r0 = jnp.asarray(drifting_ratings(0, 0, 128, p, n_waves=waves))
+    st = fit(jax.random.PRNGKey(0), RatingMatrix(r0, 128, p),
+             LandmarkSpec(n_landmarks=8, selection="popularity"))
+
+    # d1 against the *fit-time* landmark rows, exactly like fold_in does
+
+    landmarks = st.ratings[st.landmark_idx]
+
+    def coverage(wave):
+        batch = jnp.asarray(drifting_ratings(0, wave, 64, p, n_waves=waves))
+        rep = masked_similarity(batch, landmarks, "cosine")
+        return float(monitor.batch_coverage(rep, jnp.ones(64)))
+
+    early, late = coverage(1), coverage(waves - 1)
+    assert late < 0.6 * early, (early, late)

@@ -128,6 +128,46 @@ def test_moe_conserves_tokens_and_matches_dense_when_topk_equals_experts(seed):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(0, 96), st.integers(1, 12))
+@settings(max_examples=15, deadline=None)
+def test_bucketed_state_is_bit_identical_and_pad_free(seed, extra_cap, b):
+    """Bucket-mask correctness (lifecycle subsystem): at ANY capacity, a
+    BucketedState serves bit-identical pair predictions and top-N lists to the
+    unpadded state, and after a bucketed fold-in no valid row's neighbor list
+    contains a padded id with nonzero weight."""
+    from repro.core import LandmarkSpec, RatingMatrix, fit, knn
+    from repro.lifecycle import buckets
+
+    rng = np.random.default_rng(seed)
+    u, p = 40, 32
+    r = rng.integers(1, 6, (u + b, p)).astype(np.float32)
+    r *= rng.random((u + b, p)) < 0.4
+    spec = LandmarkSpec(n_landmarks=6, selection="popularity", k_neighbors=5)
+    st = fit(jax.random.PRNGKey(seed), RatingMatrix(jnp.asarray(r[:u]), u, p),
+             spec)
+    cap = u + b + extra_cap
+    bst = buckets.from_state(st, min_bucket=cap, growth=2.0)
+    assert bst.capacity >= cap
+
+    users = jnp.asarray(rng.integers(0, u, 50).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, p, 50).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(buckets.predict_pairs(bst, users, items)),
+        np.asarray(knn.predict_pairs_graph(st.graph, st.ratings, users, items)))
+    gi, gs = buckets.recommend_topn(bst, users[:8], n=6)
+    wi, ws = knn.recommend_topn_graph(st.graph, st.ratings, users[:8], n=6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+    bst = buckets.fold_in_bucketed(bst, jnp.asarray(r[u:]), jnp.int32(b), spec)
+    n = int(bst.n_valid)
+    assert n == u + b
+    idx = np.asarray(bst.state.graph.indices)
+    w = np.asarray(bst.state.graph.weights)
+    assert ((idx[:n] < n) | (w[:n] == 0)).all()  # no padded neighbor ever
+    assert (w[n:] == 0).all()  # padding rows stay inert
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_quantized_compression_error_bound(seed):
