@@ -332,6 +332,70 @@ def refresh_vs_refit_bench(u0=1024, n_items=192, waves=6, arrivals=128,
     return rows
 
 
+def sharded_foldin_vs_single_bench(u0=2048, n_items=256, batch=64, n_lm=16,
+                                   iters=3) -> List[Dict]:
+    """Beyond-paper: the mesh-sharded serve fold-in
+    (``core.fold_in_sharded``: shard-local append + O(b·k·S) candidate-list
+    all-gather) vs the single-device bucketed fold-in on the same state.
+    Requires a multi-device runtime (CI forces 8 host-platform devices);
+    returns [] on one device so ``benchmarks.run`` can report the skip.
+
+    Both paths are warm-jitted and produce bit-identical predictions (the
+    mesh-serving acceptance); what this row tracks is the *per-update wall
+    time* and the per-shard padded footprint, so a regression in the
+    shard_map schedule (e.g. an accidental all-gather of the representation)
+    shows up as a step change.
+    """
+    import jax
+
+    if jax.device_count() < 2:
+        return []
+    import jax.numpy as jnp
+
+    from repro.core import RatingMatrix
+    from repro.core.landmark_cf import fit
+    from repro.lifecycle import buckets
+
+    s = min(jax.device_count(), 8)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:s]).reshape(s),
+                             ("data",))
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 6, (u0 + batch, n_items)).astype(np.float32)
+    r *= rng.random((u0 + batch, n_items)) < 0.05
+    spec = LandmarkSpec(n_landmarks=n_lm, selection="popularity")
+    st = fit(jax.random.PRNGKey(0),
+             RatingMatrix(jnp.asarray(r[:u0]), u0, n_items), spec)
+    new = r[u0:]
+    rows = []
+    # min_bucket leaves headroom for the batch so the timed loop never grows
+    # a bucket — otherwise the row would measure capacity-regrow repacking
+    # (host round-trips on the sharded path) instead of the fold schedule
+    mb_sh = max(8, u0 // s + batch)
+    mb_si = u0 + batch
+    for variant in ("single", "sharded"):
+        if variant == "sharded":
+            fresh = lambda: buckets.from_state_sharded(
+                st, mesh, row_axes=("data",), min_bucket=mb_sh)
+            fold = lambda state: buckets.fold_in_rows_sharded(
+                state, new, batch, spec, min_bucket=mb_sh)[0]
+        else:
+            fresh = lambda: buckets.from_state(st, min_bucket=mb_si)
+            fold = lambda state: buckets.fold_in_rows(state, new, batch, spec,
+                                                      min_bucket=mb_si)
+        warm = fresh()
+        cap = warm.capacity * (s if variant == "sharded" else 1)
+        jax.block_until_ready(fold(warm).state.graph.weights)  # warm jit
+        states = [fresh() for _ in range(iters)]  # donation consumes inputs
+        t0 = time.perf_counter()
+        for state in states:
+            out = fold(state)
+        jax.block_until_ready(out.state.graph.weights)
+        rows.append({"variant": variant, "devices": s if variant == "sharded"
+                     else 1, "update_s": (time.perf_counter() - t0) / iters,
+                     "capacity": cap})
+    return rows
+
+
 def kernel_fusion_bench(a=2048, p=4096, n=128, iters=3) -> List[Dict]:
     """Beyond-paper: fused-kernel schedule vs XLA multi-GEMM (wall time, CPU;
     the HBM-traffic model is the TPU story — see EXPERIMENTS.md §Perf)."""

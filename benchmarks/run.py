@@ -19,16 +19,43 @@ def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
+def _emit_sharded_foldin():
+    """`sharded_foldin_vs_single`: mesh fold-in vs single-device fold-in.
+
+    Needs a multi-device runtime — CI runs this with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on one device the
+    row reports the skip instead of a bogus 1-shard measurement."""
+    rows = paper_tables.sharded_foldin_vs_single_bench()
+    if not rows:
+        _emit("sharded_foldin_vs_single[skipped]", 0.0,
+              "needs >=2 devices; run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8")
+        return
+    by = {r["variant"]: r for r in rows}
+    sh, si = by["sharded"], by["single"]
+    _emit(f"sharded_foldin_vs_single[u=2048,b=64,S={sh['devices']}]",
+          sh["update_s"] * 1e6,
+          f"sharded_s={sh['update_s']:.4f};single_s={si['update_s']:.4f};"
+          f"ratio={sh['update_s'] / max(si['update_s'], 1e-9):.2f}x;"
+          f"per_shard_cap={sh['capacity'] // sh['devices']}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="emit only the sharded_foldin_vs_single row (CI "
+                    "runs this under a forced 8-device host platform)")
     args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if args.sharded_only:
+        _emit_sharded_foldin()
+        return
 
     datasets = ["movielens100k", "netflix100k"]
     if args.full:
         datasets += ["movielens1m", "netflix1m"]
-
-    print("name,us_per_call,derived")
 
     # Fig. 2/3 — MAE vs #landmarks per strategy (+ CF baseline line)
     for ds in datasets[:1] if not args.full else datasets:
@@ -116,6 +143,9 @@ def main(argv=None) -> None:
           f"bg_wall_s={bg['wall_s']:.2f};sync_wall_s={sy['wall_s']:.2f};"
           f"buckets={bg['buckets']};"
           f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
+
+    # Beyond-paper: mesh-sharded fold-in vs single-device (skips on 1 device)
+    _emit_sharded_foldin()
 
     # Roofline rows from the dry-run artifacts, if present
     for tag in ("singlepod", "multipod"):

@@ -16,15 +16,18 @@ from .graph import (
     build_neighbor_graph,
     extend_neighbor_graph,
     extend_neighbor_graph_bucketed,
+    extend_neighbor_graph_sharded,
 )
 from . import knn
 from .landmark_cf import (
     LandmarkState,
+    ShardedLandmarkState,
     build_representation,
     fit,
     fit_baseline,
     fit_distributed,
     fold_in,
+    fold_in_sharded,
     predict,
     predict_dense,
 )
@@ -49,10 +52,13 @@ __all__ = [
     "build_representation",
     "extend_neighbor_graph",
     "extend_neighbor_graph_bucketed",
+    "extend_neighbor_graph_sharded",
+    "ShardedLandmarkState",
     "fit",
     "fit_baseline",
     "fit_distributed",
     "fold_in",
+    "fold_in_sharded",
     "predict",
     "predict_dense",
     "knn",

@@ -14,12 +14,13 @@ dense       O(U²)                  small U / paper-table parity: materializes
 streaming   O(U·chunk)             default everywhere: scans candidate chunks
                                    carrying a running (U, k) best-list; works
                                    for every d2 measure and sharded reps.
-pallas      O(U·k) HBM             TPU + cosine d2: the fused sims+top-k
-                                   kernel — sims tiles never leave VMEM
-                                   (kernels/knn_topk.py).
+pallas      O(U·k) HBM             TPU hot path, every d2 measure: the fused
+                                   sims+top-k kernel with in-kernel
+                                   pearson/euclidean epilogues — sims tiles
+                                   never leave VMEM (kernels/knn_topk.py).
 ==========  =====================  ============================================
 
-``auto`` resolves to ``pallas`` on TPU when d2 is cosine, else ``streaming``.
+``auto`` resolves to ``pallas`` on TPU (any d2 measure), else ``streaming``.
 All backends exclude self and store weight 0 for empty/invalid slots, so
 downstream Eq. (1) prediction (core.knn) is backend-agnostic.
 
@@ -50,8 +51,12 @@ BACKENDS = ("dense", "streaming", "pallas", "auto")
 
 
 def resolve_backend(backend: str, measure: str) -> str:
+    """``auto`` → ``pallas`` on TPU for every d2 measure (the kernel applies
+    pearson/euclidean epilogues in-kernel since the mesh-serving PR; it used
+    to silently fall back to ``streaming`` for non-cosine), else
+    ``streaming``."""
     if backend == "auto":
-        if measure == "cosine" and jax.default_backend() == "tpu":
+        if jax.default_backend() == "tpu":
             return "pallas"
         return "streaming"
     if backend not in BACKENDS:
@@ -115,18 +120,15 @@ def build_neighbor_graph(
                                         exclude_self=True)
         return finalize_topk(vals, idx)
 
-    # pallas: fused MXU sims + VMEM-resident top-k; cosine only (the kernel
-    # computes raw dot products over L2-normalized rows).
-    if measure != "cosine":
-        raise ValueError(
-            f"pallas graph backend supports cosine d2 only, got {measure!r}; "
-            "use backend='streaming' for pearson/euclidean")
+    # pallas: fused MXU sims + VMEM-resident top-k. Cosine pre-normalizes
+    # rows once outside the kernel; pearson/euclidean run their epilogues
+    # in-kernel on the raw representation (kernels/knn_topk.py).
     from repro.kernels.knn_topk import topk_sim_kernel
 
-    repn = _l2_normalize(rep)
-    vals, idx = topk_sim_kernel(repn, repn, k=k, block=block,
+    repq = _l2_normalize(rep) if measure == "cosine" else rep.astype(jnp.float32)
+    vals, idx = topk_sim_kernel(repq, repq, k=k, block=block,
                                 interpret=interpret, exclude_self=True,
-                                n_valid=u)
+                                n_valid=u, measure=measure)
     return finalize_topk(vals, idx)
 
 
@@ -204,15 +206,15 @@ def extend_neighbor_graph(
 
     # -- 1. new-vs-all: top-k rows for the b appended users -------------------
     if backend == "pallas":
-        if measure != "cosine":
-            raise ValueError(
-                f"pallas extend supports cosine d2 only, got {measure!r}")
         from repro.kernels.knn_topk import foldin_topk_kernel
 
-        cand = jnp.concatenate([_l2_normalize(rep), _l2_normalize(new_rep)])
-        vals, idx = foldin_topk_kernel(_l2_normalize(new_rep), cand, k=k,
+        norm = _l2_normalize if measure == "cosine" else \
+            (lambda x: x.astype(jnp.float32))
+        cand = jnp.concatenate([norm(rep), norm(new_rep)])
+        vals, idx = foldin_topk_kernel(norm(new_rep), cand, k=k,
                                        block_c=min(chunk, 512),
-                                       interpret=interpret, self_offset=u)
+                                       interpret=interpret, self_offset=u,
+                                       measure=measure)
     elif backend == "dense":
         # small-U parity path: one (b, U+b) block, still skinny (b ≪ U).
         cand = jnp.concatenate([rep, new_rep])
@@ -239,6 +241,124 @@ def extend_neighbor_graph(
         jnp.concatenate([pi, new_rows.indices]),
         jnp.concatenate([pv, new_rows.weights]),
     )
+
+
+def extend_neighbor_graph_sharded(
+    graph: NeighborGraph,  # (S*C, k) block-partitioned capacity-padded graph
+    rep: jax.Array,  # (S*C, n) row-sharded rep, new batch ALREADY written
+    new_rep: jax.Array,  # (bq, n) replicated batch; rows >= b_valid are filler
+    n_valid: jax.Array,  # (S,) int32 per-shard fill BEFORE this extend
+    b_valid: jax.Array,  # () int32 real rows in the batch
+    target_shard: jax.Array,  # () int32 shard that receives the batch
+    mesh,
+    measure: str = "cosine",
+    *,
+    row_axes=("pod", "data"),
+    row_rank: Optional[jax.Array] = None,  # (S*C,) logical id per slot
+) -> NeighborGraph:
+    """:func:`extend_neighbor_graph_bucketed` on a mesh — the sharded serve
+    fold-in (ROADMAP: "fold-in for the sharded graph").
+
+    Row ids are block-partitioned: shard s (mesh-linearized over ``row_axes``,
+    same linearization as ``streaming_knn_graph_sharded``) owns ids
+    ``[s*C, (s+1)*C)``; the batch lands in shard ``target_shard``'s padded
+    slots (its rep rows are already written there — shard-local append). Three
+    shard-local phases, one cross-shard collective:
+
+    1. **new-vs-all** — every shard scores the replicated (bq, n) queries
+       against its own (C, n) block and takes a local top-k; one
+       all-gather of the (bq, k) candidate lists (ids travel with values)
+       followed by a replicated merge gives each new row its global top-k.
+       The only collective payload is O(bq·k·S) — never a row of ``rep``.
+       The merge breaks exact-weight ties by ``row_rank`` (logical arrival
+       order) — the same total order the single-device scan's slot order
+       implies — so duplicate d1 representations cannot make the sharded
+       neighbor lists diverge from the single-device ones.
+    2. **back-patch** — each shard merges its local (C, bq) existing-vs-new
+       block into rows below its own fill mark, entirely shard-local.
+    3. **append** — the target shard writes the merged new rows at its fill
+       offset; filler batch rows store (0, 0.0), preserving the padded-graph
+       invariant.
+
+    Every mask is traced (per-shard fills, batch fill, target), so one
+    executable serves all fold-ins at a given (C, bq) — the bucket discipline
+    survives the mesh. Oracle-exact vs the single-device bucketed fold-in
+    modulo the dense↔sharded id bijection (tests/test_sharded_serving.py).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import cf_row_axes, cf_shard_count, \
+        shard_linear_index
+
+    if graph.is_compact:
+        graph = graph.to_full()
+    axes = cf_row_axes(mesh, row_axes)
+    n_shards = cf_shard_count(mesh, axes)
+    c = rep.shape[0] // n_shards  # per-shard capacity
+    bq = new_rep.shape[0]
+    k = graph.k
+    kk = min(k, c)
+    if row_rank is None:  # fall back to sharded-id order (block == logical)
+        row_rank = jnp.arange(rep.shape[0], dtype=jnp.int32)
+
+    def inner(gi_l, gw_l, rep_l, rank_l, new_rep, n_valid, b_valid, target):
+        lin = shard_linear_index(mesh, axes)
+        mine = lin == target
+        my_valid = n_valid[lin]
+        base_gid = lin * c
+        new_gid = target * c + n_valid[target] + jnp.arange(bq, dtype=jnp.int32)
+        slot = jnp.arange(c)
+
+        # -- 1. new-vs-all: local candidates, local top-k, gathered merge ----
+        sims = dense_similarity(new_rep, rep_l, measure)  # (bq, C)
+        limit = my_valid + jnp.where(mine, b_valid, 0)  # batch rows count here
+        invalid = ((slot >= limit)[None, :]
+                   | ((base_gid + slot)[None, :] == new_gid[:, None]))
+        sims = jnp.where(invalid, -jnp.inf, sims)
+        v, i = jax.lax.top_k(sims, kk)  # ties -> lowest slot == lowest rank
+        g = base_gid + i
+        r = rank_l[i]
+        vs = jax.lax.all_gather(v, axes, axis=1, tiled=True)  # (bq, kk*S)
+        gs = jax.lax.all_gather(g, axes, axis=1, tiled=True)
+        rs = jax.lax.all_gather(r, axes, axis=1, tiled=True)
+        # canonical merge: weight desc, logical rank asc — two stable
+        # argsorts (rank first, then value) emulate the lexicographic top-k
+        ord1 = jnp.argsort(rs, axis=1)
+        vs1 = jnp.take_along_axis(vs, ord1, axis=1)
+        gs1 = jnp.take_along_axis(gs, ord1, axis=1)
+        sel = jnp.argsort(-vs1, axis=1)[:, :k]
+        nv = jnp.take_along_axis(vs1, sel, axis=1)
+        ni = jnp.take_along_axis(gs1, sel, axis=1)
+        ok = jnp.isfinite(nv) & (jnp.arange(bq) < b_valid)[:, None]
+        new_idx = jnp.where(ok, ni, 0).astype(jnp.int32)
+        new_w = jnp.where(ok, nv, 0.0).astype(jnp.float32)
+
+        # -- 2. back-patch local valid rows with the valid batch columns -----
+        back = dense_similarity(rep_l, new_rep, measure)  # (C, bq)
+        back = jnp.where((jnp.arange(bq) < b_valid)[None, :], back, -jnp.inf)
+        mv = jnp.concatenate([gw_l, back], axis=1)  # (C, k + bq)
+        mi = jnp.concatenate(
+            [gi_l, jnp.broadcast_to(new_gid[None, :], (c, bq))], axis=1)
+        pv, psel = jax.lax.top_k(mv, k)
+        pi = jnp.take_along_axis(mi, psel, axis=1)
+        r_valid = (slot < my_valid)[:, None]
+        gi2 = jnp.where(r_valid, pi, gi_l)
+        gw2 = jnp.where(r_valid, pv, gw_l)
+
+        # -- 3. append the new rows on the target shard ----------------------
+        gi3 = jax.lax.dynamic_update_slice(gi2, new_idx, (n_valid[target], 0))
+        gw3 = jax.lax.dynamic_update_slice(gw2, new_w, (n_valid[target], 0))
+        return jnp.where(mine, gi3, gi2), jnp.where(mine, gw3, gw2)
+
+    row = P(axes, None)
+    gi, gw = shard_map(
+        inner, mesh=mesh,
+        in_specs=(row, row, row, P(axes), P(None, None), P(None), P(), P()),
+        out_specs=(row, row), check_rep=False,
+    )(graph.indices, graph.weights, rep, row_rank, new_rep, n_valid, b_valid,
+      target_shard)
+    return NeighborGraph(gi, gw)
 
 
 def _bucketed_query_topk(

@@ -35,14 +35,22 @@ from .types import NeighborGraph
 EPS = 1e-8
 
 
-def _mask_padded_rows(idx: jax.Array, w: jax.Array, n_valid) -> jax.Array:
-    """Gathered neighbor weights with ids ``>= n_valid`` zeroed (bucket
-    padding). Operates on the (B, k) query slice — never on the full
-    (capacity, k) graph — so the request-path cost stays O(B·k).
-    ``n_valid=None`` (no padding) returns the weights untouched."""
+def _mask_padded_rows(idx: jax.Array, w: jax.Array, n_valid,
+                      shard_cap=None) -> jax.Array:
+    """Gathered neighbor weights with padded-row ids zeroed (bucket padding).
+    Operates on the (B, k) query slice — never on the full (capacity, k)
+    graph — so the request-path cost stays O(B·k).
+
+    ``n_valid=None`` (no padding) returns the weights untouched. With a
+    scalar ``n_valid``, ids ``>= n_valid`` are padding (single-device
+    BucketedState). With ``shard_cap`` set (static) ``n_valid`` is the (S,)
+    per-shard fill of a block-partitioned ShardedLandmarkState and id
+    ``s*C + slot`` is valid iff ``slot < n_valid[s]``."""
     if n_valid is None:
         return w
-    return jnp.where(idx < n_valid, w, 0.0)
+    if shard_cap is None:
+        return jnp.where(idx < n_valid, w, 0.0)
+    return jnp.where(idx % shard_cap < n_valid[idx // shard_cap], w, 0.0)
 
 
 def _topk_neighbors(sim_row: jax.Array, self_idx: jax.Array, k: int):
@@ -152,14 +160,15 @@ def predict_pairs(
     return jax.vmap(one)(users, items)
 
 
-@partial(jax.jit, static_argnames=("n",))
+@partial(jax.jit, static_argnames=("n", "shard_cap"))
 def recommend_topn_graph(
     graph: NeighborGraph,
     ratings: jax.Array,  # (U, P), 0 == missing
     users: jax.Array,  # (B,) query user ids
     n: int = 10,
     *,
-    n_valid=None,  # () int32: rows >= n_valid are bucket padding
+    n_valid=None,  # () int32 (or (S,) with shard_cap): bucket-padding mask
+    shard_cap=None,  # static per-shard capacity of a sharded graph
 ):
     """Top-N unseen items per query user — the serve-path recommendation op.
 
@@ -173,7 +182,8 @@ def recommend_topn_graph(
     """
     mask, means, centered = _center(ratings)
     idx = graph.indices[users]  # (B, k)
-    w = _mask_padded_rows(idx, graph.weights[users], n_valid).astype(centered.dtype)
+    w = _mask_padded_rows(idx, graph.weights[users], n_valid,
+                          shard_cap).astype(centered.dtype)
     preds = _block_predict(idx, w, centered, mask, means[users])  # (B, P)
     preds = jnp.where(mask[users] > 0, -jnp.inf, preds)  # never re-recommend
     scores, items = jax.lax.top_k(preds, n)
@@ -181,14 +191,15 @@ def recommend_topn_graph(
     return items, scores
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("shard_cap",))
 def predict_pairs_graph(
     graph: NeighborGraph,
     ratings: jax.Array,
     users: jax.Array,  # (B,) query user ids
     items: jax.Array,  # (B,) query item ids
     *,
-    n_valid=None,  # () int32: rows >= n_valid are bucket padding
+    n_valid=None,  # () int32 (or (S,) with shard_cap): bucket-padding mask
+    shard_cap=None,  # static per-shard capacity of a sharded graph
 ) -> jax.Array:
     """``predict_pairs`` from a NeighborGraph — no (U, U) array anywhere.
 
@@ -196,7 +207,7 @@ def predict_pairs_graph(
     """
     mask, means, _ = _center(ratings)
     idx_b = graph.indices[users]  # (B, k)
-    w_b = _mask_padded_rows(idx_b, graph.weights[users], n_valid)
+    w_b = _mask_padded_rows(idx_b, graph.weights[users], n_valid, shard_cap)
 
     def one(idx, w, u, v):
         return _pair_predict(idx, w, u, v, ratings, mask, means)

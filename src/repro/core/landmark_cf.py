@@ -66,6 +66,63 @@ class LandmarkState:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ShardedLandmarkState:
+    """A serving ``LandmarkState`` block-partitioned over mesh row axes.
+
+    Every row-indexed array of ``state`` has leading dimension ``S * C``
+    (S = mesh shards over ``axes``, C = per-shard bucket capacity from
+    ``lifecycle.buckets``) and is placed with ``PartitionSpec(axes, None)`` —
+    shard s (mesh-linearized, the ``streaming_knn_graph_sharded``
+    linearization) owns rows ``[s*C, (s+1)*C)``. Graph neighbor ids and
+    ``landmark_idx`` live in this *sharded* id space (``s*C + slot``);
+    ``n_valid[s]`` counts the live rows of shard s, the rest is zero filler.
+
+    ``row_rank[s*C + slot]`` is the row's *logical* id — its position in the
+    single-device arrival order (fit rows 0..U-1, then fold-in batches in
+    stream order). Within a shard, slots are always appended in logical
+    order, so local top-k tie-breaking is canonical for free; the cross-shard
+    merge of fold-in candidate lists breaks exact-weight ties by this rank,
+    which makes the sharded graph's neighbor lists — and therefore every
+    prediction — **bit-identical** to the single-device run even when d1
+    collisions produce duplicate weights (they do, frequently).
+
+    ``mesh``/``axes`` ride in the pytree aux data, so jitted steps treat them
+    as static and the whole state passes through jit/shard_map as arrays only.
+    """
+
+    state: LandmarkState
+    n_valid: jax.Array  # (S,) int32 live rows per shard block
+    row_rank: jax.Array  # (S*C,) int32 logical id per slot (tie canonicalizer)
+    mesh: jax.sharding.Mesh
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.state, self.n_valid, self.row_rank), (self.mesh, self.axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], *aux)
+
+    @property
+    def shard_count(self) -> int:
+        from repro.distributed.sharding import cf_shard_count
+
+        return cf_shard_count(self.mesh, self.axes)
+
+    @property
+    def capacity(self) -> int:
+        """Per-shard row capacity C."""
+        return self.state.ratings.shape[0] // self.shard_count
+
+    @property
+    def total_valid(self) -> int:
+        import numpy as np
+
+        return int(np.asarray(self.n_valid).sum())
+
+
 def _oriented(ratings: jax.Array, mode: str) -> jax.Array:
     if mode == "user":
         return ratings
@@ -152,6 +209,79 @@ def fold_in(
         jnp.concatenate([state.ratings, new_ratings]),
         graph=graph,
     )
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def fold_in_sharded(
+    sstate: ShardedLandmarkState,
+    new_ratings: jax.Array,  # (bq, P) batch bucket; rows >= b_valid are filler
+    b_valid: jax.Array,  # () int32 real rows in the batch
+    target_shard: jax.Array,  # () int32 shard that receives the batch
+    spec: LandmarkSpec,
+) -> ShardedLandmarkState:
+    """Mesh-wide ``fold_in_bucketed``: the whole batch lands on one shard.
+
+    Same math as the single-device bucketed fold-in (d1 through the frozen
+    landmarks, new-vs-all scan, back-patch) with the row space
+    block-partitioned: the batch is appended *shard-locally* on
+    ``target_shard`` (``distributed.sharding.shard_local_append``) and only
+    the back-patch merge crosses shards — as an O(bq·k·S) all-gather of
+    candidate lists inside :func:`~repro.core.graph.extend_neighbor_graph_sharded`,
+    never a gather of the (U, n) representation (jaxpr-checked in
+    tests/test_sharded_serving.py). The caller picks ``target_shard`` (the
+    serve driver uses least-loaded) and must guarantee
+    ``n_valid[target] + bq <= capacity``
+    (``lifecycle.buckets.ensure_capacity_sharded``).
+
+    ``b_valid`` and ``target_shard`` are traced, so one executable serves
+    every fold-in at a given (capacity, bq) — the PR-3 bucket discipline,
+    now per shard. Oracle-exact vs the single-device fold-in modulo the
+    dense↔sharded row-id bijection.
+    """
+    from repro.distributed.sharding import shard_local_append
+
+    from .graph import extend_neighbor_graph_sharded
+
+    st = sstate.state
+    bq = new_ratings.shape[0]
+    q_valid = (jnp.arange(bq) < b_valid)[:, None]
+    new_ratings = jnp.where(q_valid, new_ratings, 0.0)
+
+    landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen at fit
+    new_rep = masked_similarity(new_ratings, landmarks, spec.d1)  # (bq, n)
+    new_rep = jnp.where(q_valid, new_rep, 0.0)
+
+    mesh, axes, n_valid = sstate.mesh, sstate.axes, sstate.n_valid
+    ratings = shard_local_append(st.ratings, new_ratings, n_valid,
+                                 target_shard, mesh, axes)
+    rep = shard_local_append(st.representation, new_rep, n_valid,
+                             target_shard, mesh, axes)
+    # logical ids continue the arrival order: next id == total valid rows
+    ranks = jnp.sum(n_valid) + jnp.arange(bq, dtype=jnp.int32)
+    row_rank = shard_local_append(sstate.row_rank, ranks, n_valid,
+                                  target_shard, mesh, axes)
+    graph = extend_neighbor_graph_sharded(
+        st.graph, rep, new_rep, n_valid, b_valid, target_shard, mesh,
+        spec.d2, row_axes=axes, row_rank=row_rank)
+    # pin canonical shardings on the outputs so a state produced by fold-in
+    # carries the same layout as one freshly device_put by the bucket driver
+    # — otherwise the first fold after a capacity regrow compiles a second
+    # executable per (C, bq) just for the provenance difference
+    row = jax.sharding.NamedSharding(mesh, P(axes, None))
+    row1 = jax.sharding.NamedSharding(mesh, P(axes))
+    repl = jax.sharding.NamedSharding(mesh, P())
+    pin_row = lambda x: jax.lax.with_sharding_constraint(x, row)
+    pin_repl = lambda x: jax.lax.with_sharding_constraint(x, repl)
+    return ShardedLandmarkState(
+        LandmarkState(
+            jax.lax.with_sharding_constraint(
+                st.landmark_idx, jax.sharding.NamedSharding(mesh, P(None))),
+            pin_row(rep), pin_row(ratings),
+            graph=type(st.graph)(pin_row(graph.indices),
+                                 pin_row(graph.weights))),
+        pin_repl(n_valid.at[target_shard].add(b_valid.astype(jnp.int32))),
+        jax.lax.with_sharding_constraint(row_rank, row1),
+        mesh, axes)
 
 
 def predict(state: LandmarkState, users: jax.Array, items: jax.Array,
@@ -241,25 +371,28 @@ def fit_distributed(
 
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
     u = ratings.shape[0]
-    assert u % n_shards == 0, (u, n_shards)  # shard_map row-partition contract
     k = max(1, min(spec.k_neighbors, u - 1))
+    # Ragged U: pad rows up to the shard count for the shard_map graph build.
+    # Selection runs on the *unpadded* matrix, exactly like the single-device
+    # fit — the oracle contract (sharded refresh == from-scratch fit) depends
+    # on padding never influencing which rows become landmarks.
+    u_per = -(-u // n_shards)
+    u_pad = u_per * n_shards
+    idx = select_landmarks(key, ratings, spec.n_landmarks, spec.selection)
+    landmarks = ratings[idx]  # replicated (n, P)
+    r_pad = jnp.pad(ratings, ((0, u_pad - u), (0, 0))) if u_pad != u else ratings
 
-    @partial(
-        jax.jit,
-        in_shardings=(None, user_sharding),
-        out_shardings=(None, rep_sharding),
-    )
-    def _rep(key, r):
-        idx = select_landmarks(key, r, spec.n_landmarks, spec.selection)
-        landmarks = r[idx]  # gather -> replicated (n, P)
-        return idx, masked_similarity(r, landmarks, spec.d1)  # local GEMMs
+    @partial(jax.jit, in_shardings=(user_sharding, None),
+             out_shardings=rep_sharding)
+    def _rep(r, lm):
+        return masked_similarity(r, lm, spec.d1)  # local GEMMs
 
-    idx, rep = _rep(key, ratings)
+    rep = _rep(jax.device_put(r_pad, user_sharding), landmarks)
     with mesh:
         vals, nbrs = jax.jit(
             lambda rp: streaming_knn_graph_sharded(
                 rp, mesh, spec.d2, k=k, chunk_local=chunk_local, row_axes=axes,
-                exclude_self=True)
+                exclude_self=True, n_valid=u)
         )(rep)
-        graph = jax.jit(finalize_topk)(vals, nbrs)
-    return LandmarkState(idx, rep, ratings, graph=graph)
+        graph = jax.jit(finalize_topk)(vals[:u], nbrs[:u])
+    return LandmarkState(idx, rep[:u], ratings, graph=graph)

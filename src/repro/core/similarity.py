@@ -19,7 +19,7 @@ These jnp implementations are also the oracles for the fused Pallas kernel in
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,7 +198,7 @@ def streaming_knn_graph(  # callers jit this; ``rules`` stays a static python di
 def streaming_knn_graph_sharded(
     rep: jax.Array, mesh, measure: str = "cosine", k: int = 14,
     chunk_local: int = 512, row_axes=("pod", "data"),
-    exclude_self: bool = False,
+    exclude_self: bool = False, n_valid: Optional[int] = None,
 ):
     """shard_map variant: rows stay local per shard, candidate chunks are
     all-gathered one at a time (chunk_local × n_shards rows per step). No
@@ -210,12 +210,18 @@ def streaming_knn_graph_sharded(
     ``j // chunk_local`` — whose global row id is ``shard * u_local + local``
     (rows are block-partitioned over the same linearization). Verified against
     the unsharded oracle in tests/test_distributed.py, including multi-axis
-    meshes."""
+    meshes.
+
+    ``n_valid`` (static) marks trailing global rows as padding (ragged U
+    rounded up to the shard count): they are never selected as candidates,
+    and their own query rows are garbage the caller slices off."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(a for a in row_axes if a in mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if n_valid is None:
+        n_valid = rep.shape[0]
 
     def inner(rep_l):
         u_l, n = rep_l.shape
@@ -240,8 +246,8 @@ def streaming_knn_graph_sharded(
                                                 chunk, axis=0)
             cand = jax.lax.all_gather(mine, axes, tiled=True)  # (chunk*S, n)
             within = c_idx * chunk + j % chunk  # local row in the padded space
-            valid = within < u_l
             cand_gid = (j // chunk) * u_l + within
+            valid = (within < u_l) & (cand_gid < n_valid)
             sims = dense_similarity(rep_l, cand, measure)
             invalid = ~valid[None, :]
             if exclude_self:

@@ -108,6 +108,110 @@ def divisible(dim: int, axes, mesh: Mesh) -> bool:
     return dim % n == 0
 
 
+# --------------------------------------------------------------------------
+# CF row-block sharding (ShardedLandmarkState, core/landmark_cf.py).
+#
+# The serving artifact block-partitions user rows over the mesh row axes with
+# the same linearization as ``streaming_knn_graph_sharded``: shard s (the
+# mesh-linearized index over ``axes``) owns rows [s*C, (s+1)*C) of every
+# row-indexed array, where C is the per-shard bucket capacity
+# (lifecycle/buckets.py schedules). A *sharded row id* is ``s * C + slot``;
+# a fitted state's contiguous *dense* ids map through ``dense_to_sharded_ids``
+# (shard = id // u_per, slot = id % u_per with u_per = ceil(U / S)).
+# --------------------------------------------------------------------------
+
+
+def cf_row_axes(mesh: Mesh, row_axes=("pod", "data")) -> Tuple[str, ...]:
+    """The subset of ``row_axes`` that exists on ``mesh`` (mesh-order kept)."""
+    return tuple(a for a in row_axes if a in mesh.axis_names)
+
+
+def cf_shard_count(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cf_row_sharding(mesh: Mesh, axes, ndim: int = 2) -> NamedSharding:
+    """Rows block-partitioned over ``axes``, trailing dims replicated."""
+    return NamedSharding(mesh, P(axes, *(None,) * (ndim - 1)))
+
+
+def shard_linear_index(mesh: Mesh, axes) -> jax.Array:
+    """Inside shard_map: this shard's linearized index over ``axes`` —
+    identical to the linearization of streaming_knn_graph_sharded."""
+    lin = jax.numpy.int32(0)
+    for a in axes:
+        lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+    return lin
+
+
+def dense_to_sharded_ids(ids, u_per: int, capacity: int):
+    """Map contiguous fitted row ids to the block-partitioned id space."""
+    return (ids // u_per) * capacity + ids % u_per
+
+
+def remap_block_ids(ids, old_capacity: int, new_capacity: int):
+    """Re-express sharded row ids after a per-shard capacity regrow."""
+    return (ids // old_capacity) * new_capacity + ids % old_capacity
+
+
+def pack_row_blocks(x: "np.ndarray", n_shards: int, u_per: int,
+                    capacity: int) -> "np.ndarray":
+    """(U, ...) dense rows -> (S*C, ...) zero-padded per-shard blocks
+    (host-side; callers device_put with :func:`cf_row_sharding`)."""
+    import numpy as np
+
+    x = np.asarray(x)
+    u = x.shape[0]
+    out = np.zeros((n_shards * capacity,) + x.shape[1:], x.dtype)
+    for s in range(n_shards):
+        lo, hi = s * u_per, min((s + 1) * u_per, u)
+        if hi > lo:
+            out[s * capacity:s * capacity + (hi - lo)] = x[lo:hi]
+    return out
+
+
+def repack_row_blocks(x: "np.ndarray", n_shards: int, old_capacity: int,
+                      new_capacity: int) -> "np.ndarray":
+    """Grow every per-shard block from C_old to C_new rows (host-side)."""
+    import numpy as np
+
+    x = np.asarray(x)
+    assert new_capacity >= old_capacity, (old_capacity, new_capacity)
+    blocks = x.reshape((n_shards, old_capacity) + x.shape[1:])
+    pad = [(0, 0)] * blocks.ndim
+    pad[1] = (0, new_capacity - old_capacity)
+    return np.pad(blocks, pad).reshape((n_shards * new_capacity,) + x.shape[1:])
+
+
+def shard_local_append(x: jax.Array, rows: jax.Array, n_valid: jax.Array,
+                       target: jax.Array, mesh: Mesh, axes) -> jax.Array:
+    """Write ``rows`` into shard ``target`` at its fill offset — the
+    shard-local append of the sharded fold-in. ``x`` is (S*C, ...) row-sharded,
+    ``rows`` (b, ...) replicated, ``n_valid`` the (S,) per-shard fill counts,
+    ``target`` a traced scalar. Non-target shards are untouched; no cross-shard
+    traffic beyond the already-replicated ``rows``."""
+    from jax.experimental.shard_map import shard_map
+
+    nd = x.ndim
+
+    def inner(x_l, rows, n_valid, target):
+        lin = shard_linear_index(mesh, axes)
+        upd = jax.lax.dynamic_update_slice(
+            x_l, rows.astype(x_l.dtype),
+            (n_valid[target],) + (0,) * (nd - 1))
+        return jax.numpy.where(lin == target, upd, x_l)
+
+    row_spec = P(axes, *(None,) * (nd - 1))
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(row_spec, P(*(None,) * nd), P(None), P()),
+        out_specs=row_spec, check_rep=False,
+    )(x, rows, n_valid, target)
+
+
 def shard_batch_full(x: jax.Array, mesh: Optional[Mesh], axis: int = 0) -> jax.Array:
     """Constrain dim ``axis`` of x over EVERY mesh axis (recsys batches are
     huge and the models tiny — compute scales with all chips, and the

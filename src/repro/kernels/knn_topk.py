@@ -1,19 +1,30 @@
 """Fused similarity + streaming top-k — the d2/kNN hot path without ever
 writing the (U, C) similarity matrix to HBM (§Perf hillclimb, web_fit cell).
 
-For L2-normalized landmark representations (cosine d2), each grid step
-computes one (bu × bc) sims tile on the MXU and folds it into a running
-(bu, k) best-list in VMEM via k rounds of max-extract-mask. HBM traffic drops
-from O(U·C) sims reads+writes to one pass over the candidate rows:
+Each grid step computes one (bu × bc) sims tile on the MXU, applies the d2
+``measure`` epilogue *in-kernel* (VPU, tile-local), and folds the tile into a
+running (bu, k) best-list in VMEM via k rounds of max-extract-mask. HBM
+traffic drops from O(U·C) sims reads+writes to one pass over the candidate
+rows:
 
   grid = (U/bu, C/bc)  c innermost arbitrary
   VMEM: rep tile (bu, n) + cand tile (bc, n) + best (bu, k) ×2 scratch
 
+Measures (matching ``core.similarity.dense_similarity`` up to dot order):
+
+- ``cosine``    — rows are L2-normalized by the *caller* (one pass, amortized
+                  over every tile pair); the tile is the raw dot product.
+- ``pearson``   — rows are mean-centered in-kernel (the full feature axis is
+                  resident per tile), then cosine of the centered rows.
+- ``euclidean`` — squared norms reduced in-kernel, d² = |u|² − 2z + |v|²,
+                  epilogue 1/(1+√d²) (``similarity_from_distance``) so the
+                  stored weights feed Eq. (1) directly.
+
 The wrapper pads both row axes up to the block multiples (padded candidate
 columns are masked to -inf via ``n_valid``), and ``exclude_self`` masks the
-global diagonal in-kernel — so the kernel can serve cosine d2 graph builds
-directly (core.graph backend="pallas") where rep == cand and row u must not
-pick itself.
+global diagonal in-kernel — so the kernel serves every d2 graph build
+(core.graph backend="pallas") where rep == cand and row u must not pick
+itself.
 """
 from __future__ import annotations
 
@@ -24,9 +35,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+EPS = 1e-8
+MEASURES = ("cosine", "pearson", "euclidean")
+
+
+def _tile_sims(rep, cand, measure):
+    """One (bu, bc) d2 tile with the measure epilogue applied in-kernel.
+
+    ``rep``/``cand`` are f32 tiles carrying the FULL feature axis, so
+    row-local reductions (means, squared norms) are exact per tile."""
+    if measure == "pearson":
+        rep = rep - jnp.mean(rep, axis=1, keepdims=True)
+        cand = cand - jnp.mean(cand, axis=1, keepdims=True)
+    z = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bu, bc)
+    if measure == "cosine":  # caller pre-normalizes rows
+        return z
+    nu = jnp.sum(rep * rep, axis=1, keepdims=True)  # (bu, 1)
+    nv = jnp.sum(cand * cand, axis=1)[None, :]  # (1, bc)
+    if measure == "pearson":
+        return z / jnp.maximum(jnp.sqrt(nu) * jnp.sqrt(nv), EPS)
+    if measure == "euclidean":
+        d2 = jnp.maximum(nu - 2.0 * z + nv, 0.0)
+        return 1.0 / (1.0 + jnp.sqrt(d2))
+    raise ValueError(f"unknown measure {measure!r}")
+
 
 def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc,
-            bu, n_valid, exclude_self):
+            bu, n_valid, exclude_self, measure):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         best_v[...] = jnp.full_like(best_v, -jnp.inf)
@@ -34,8 +70,7 @@ def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc,
 
     rep = rep_ref[...].astype(jnp.float32)  # (bu, n)
     cand = cand_ref[...].astype(jnp.float32)  # (bc, n)
-    sims = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (bu, bc)
+    sims = _tile_sims(rep, cand, measure)  # (bu, bc)
     base = pl.program_id(1) * bc
     # global candidate / query row ids for this tile (2D iota: TPU-safe)
     col_gid = base + jax.lax.broadcasted_iota(jnp.int32, (bu, bc), 1)
@@ -71,22 +106,25 @@ def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc,
 
 
 def topk_sim_kernel(
-    rep: jax.Array,  # (U, n) L2-normalized rows (cosine) — queries
-    cand: jax.Array,  # (C, n) L2-normalized rows — candidates
+    rep: jax.Array,  # (U, n) query rows (L2-normalized for cosine)
+    cand: jax.Array,  # (C, n) candidate rows
     k: int = 14,
     block: Tuple[int, int] = (128, 512),
     interpret: bool = None,
     exclude_self: bool = False,
     n_valid: Optional[int] = None,
+    measure: str = "cosine",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (vals, idx): for every rep row, top-k candidate dot products.
+    """Returns (vals, idx): for every rep row, top-k candidate d2 weights.
 
     Shapes need not be block multiples — both row axes are zero-padded up to
     them and padded candidates are masked out (never selected). ``n_valid``
     restricts selection to the first ``n_valid`` candidate rows (defaults to
     ``cand.shape[0]``). ``exclude_self`` assumes rep and cand are the *same*
     row set (rep row i == cand row i) and masks the diagonal; slots that end
-    up empty (e.g. fully masked tiles) come back as -inf values.
+    up empty (e.g. fully masked tiles) come back as -inf values. ``measure``
+    selects the in-kernel epilogue (module docstring); cosine expects
+    pre-normalized rows, pearson/euclidean take raw representation rows.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -112,7 +150,8 @@ def topk_sim_kernel(
         )
     vals, idx = pl.pallas_call(
         functools.partial(_kernel, k=k, n_c=n_c, bc=bc, bu=bu,
-                          n_valid=n_valid, exclude_self=exclude_self),
+                          n_valid=n_valid, exclude_self=exclude_self,
+                          measure=measure),
         grid=(u_pad // bu, n_c),
         in_specs=[
             pl.BlockSpec((bu, n), lambda i, j: (i, 0)),
@@ -151,7 +190,7 @@ def topk_sim_ref(rep, cand, k=14):
 
 
 def _foldin_kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *,
-                   k, n_c, bc, n_valid, self_offset):
+                   k, n_c, bc, n_valid, self_offset, measure):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         best_v[...] = jnp.full_like(best_v, -jnp.inf)
@@ -159,8 +198,7 @@ def _foldin_kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *,
 
     rep = rep_ref[...].astype(jnp.float32)  # (b_pad, n) — resident all steps
     cand = cand_ref[...].astype(jnp.float32)  # (bc, n)
-    sims = jax.lax.dot_general(rep, cand, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (b_pad, bc)
+    sims = _tile_sims(rep, cand, measure)  # (b_pad, bc)
     b_pad = rep.shape[0]
     base = pl.program_id(0) * bc
     col_gid = base + jax.lax.broadcasted_iota(jnp.int32, (b_pad, bc), 1)
@@ -189,21 +227,23 @@ def _foldin_kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *,
 
 
 def foldin_topk_kernel(
-    rep: jax.Array,  # (b, n) L2-normalized fold-in rows — queries
-    cand: jax.Array,  # (C, n) L2-normalized candidates (existing + new rows)
+    rep: jax.Array,  # (b, n) fold-in query rows (L2-normalized for cosine)
+    cand: jax.Array,  # (C, n) candidate rows (existing + new rows)
     k: int = 14,
     block_c: int = 512,
     interpret: bool = None,
     self_offset: Optional[int] = None,
     n_valid: Optional[int] = None,
+    measure: str = "cosine",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Top-k candidate dot products for a skinny fold-in batch.
+    """Top-k candidate d2 weights for a skinny fold-in batch.
 
     ``self_offset`` marks where the query rows sit in the candidate id space
     (query i == candidate ``self_offset + i``, masked out so a fold-in row
     never lists itself); pass None (→ past the end) when queries are not
     among the candidates. ``n_valid`` restricts selection to the first
-    ``n_valid`` candidates, as in :func:`topk_sim_kernel`.
+    ``n_valid`` candidates, and ``measure`` selects the in-kernel epilogue,
+    as in :func:`topk_sim_kernel`.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -231,7 +271,8 @@ def foldin_topk_kernel(
         )
     vals, idx = pl.pallas_call(
         functools.partial(_foldin_kernel, k=k, n_c=n_c, bc=bc,
-                          n_valid=n_valid, self_offset=self_offset),
+                          n_valid=n_valid, self_offset=self_offset,
+                          measure=measure),
         grid=(n_c,),
         in_specs=[
             pl.BlockSpec((b_pad, n), lambda j: (0, 0)),  # fetched once

@@ -14,6 +14,16 @@
   coverage), and policy-triggered background landmark refresh with an atomic
   generation-stamped artifact swap.
   ``python -m repro.launch.serve --workload cf --lifecycle --smoke``
+- ``cf --lifecycle --mesh pod=K,data=L``: the same loop sharded end-to-end
+  (docs/distributed_serving.md) — ``fit_distributed`` base generation,
+  ``ShardedLandmarkState`` serving with per-shard bucket capacities,
+  shard-local-append fold-in, mesh-aware background refresh committing
+  per-shard checkpoint files — with a single-device shadow replay asserting
+  every wave's predictions are *bit-identical*, and a jaxpr/sharding check
+  proving the fold-in path never materializes a replicated (U, n)
+  representation. On CPU the device count is forced to K·L host devices
+  (CI runs exactly this):
+  ``python -m repro.launch.serve --workload cf --lifecycle --smoke --mesh pod=2,data=4``
 
 CF latency is reported per wave as p50/p95 over the timed request loop. In
 plain ``cf`` mode fold-in changes U, so the first request after it recompiles
@@ -27,6 +37,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
+import os
 import tempfile
 import time
 
@@ -248,6 +259,36 @@ def _withhold(rng, batch, frac):
         cols.astype(np.int32), batch[rows, cols].astype(np.float32)
 
 
+def _clamp_lifecycle_smoke(args):
+    """CI-sized limits, shared by the single-device and --mesh replays."""
+    args.users, args.items = min(args.users, 256), min(args.items, 96)
+    args.waves = min(args.waves, 8)
+    args.arrivals = min(args.arrivals, 48)
+    args.requests = min(args.requests, 8)
+    args.batch = min(args.batch, 128)
+    args.foldin = min(args.foldin, 32)
+    args.min_bucket = min(args.min_bucket, 256)
+
+
+def _offer_holdout(mon, rng, key, start_id, hrows, hcols, hvals, res_batch):
+    """Offer withheld triples to the reservoir at its fixed batch shape
+    (subsample when the arrival withheld more than one offer holds). User
+    ids are ``start_id + row`` — logical ids on both replay paths."""
+    from repro.lifecycle import monitor
+
+    if len(hrows) > res_batch:
+        pick = rng.choice(len(hrows), res_batch, replace=False)
+        hrows, hcols, hvals = hrows[pick], hcols[pick], hvals[pick]
+    hu = np.zeros(res_batch, np.int32)
+    hi = np.zeros(res_batch, np.int32)
+    hr = np.zeros(res_batch, np.float32)
+    hu[:len(hrows)] = start_id + hrows
+    hi[:len(hrows)] = hcols
+    hr[:len(hrows)] = hvals
+    return monitor.reservoir_add(mon, key, jnp.asarray(hu), jnp.asarray(hi),
+                                 jnp.asarray(hr), jnp.int32(len(hrows)))
+
+
 def _serve_cf_lifecycle(args):
     """Replay a drifting stream through the fit→serve→monitor→refresh loop."""
     from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
@@ -256,7 +297,8 @@ def _serve_cf_lifecycle(args):
     from repro.lifecycle import buckets, monitor, policy
     from repro.lifecycle.monitor import _holdout_stats
     from repro.lifecycle.refresh import RefreshManager
-    from repro.train.checkpoint import (latest_step, load_landmark_state,
+    from repro.train.checkpoint import (landmark_state_meta, latest_step,
+                                        load_landmark_state,
                                         save_landmark_state)
 
     arch = registry.get("landmark_cf")
@@ -267,14 +309,10 @@ def _serve_cf_lifecycle(args):
     # benchmarks.run refresh_vs_refit and docs/lifecycle.md.
     spec = dataclasses.replace(spec, selection=args.selection)
     rspec = SMOKE_REFRESH if args.smoke else REFRESH
+    if args.compact_serving:
+        rspec = dataclasses.replace(rspec, compact_serving=True)
     if args.smoke:
-        args.users, args.items = min(args.users, 256), min(args.items, 96)
-        args.waves = min(args.waves, 8)
-        args.arrivals = min(args.arrivals, 48)
-        args.requests = min(args.requests, 8)
-        args.batch = min(args.batch, 128)
-        args.foldin = min(args.foldin, 32)
-        args.min_bucket = min(args.min_bucket, 256)
+        _clamp_lifecycle_smoke(args)
 
     stream = dict(n_waves=args.waves, drift=args.drift)
     ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="cf_lifecycle_")
@@ -305,10 +343,11 @@ def _serve_cf_lifecycle(args):
     base_cov = float(monitor.batch_coverage(
         st.representation, jnp.ones(args.users)))
     bst = buckets.from_state(st, args.min_bucket, args.growth)
-    caps_used = {bst.capacity}
+    caps_used = {(bst.capacity, False)}  # (capacity, serving-compact?)
     mon = monitor.init_monitor(rspec.reservoir, args.users, base_cov)
     pol = policy.PolicyState(generation=gen0)
-    manager = RefreshManager(ckpt_dir, spec)
+    manager = RefreshManager(ckpt_dir, spec, compact=rspec.compact_serving,
+                             compact_max_rows=rspec.compact_max_rows)
     pending = None  # (generation, snapshot rows) of the refit in flight
     last_refit = None  # same, for the committed generation (oracle check)
     swap_wave = pre_post = None
@@ -332,22 +371,11 @@ def _serve_cf_lifecycle(args):
             start_id = int(bst.n_valid)  # arrival i becomes row start_id + i
             bst = buckets.fold_in_rows(bst, train, bq, spec,
                                        args.min_bucket, args.growth)
-            caps_used.add(bst.capacity)
+            caps_used.add((bst.capacity, bst.state.graph.is_compact))
             rep_rows = bst.state.representation[start_id:start_id + len(train)]
             mon = monitor.observe_fold_in(mon, rep_rows, jnp.int32(len(train)))
-            # offer the withheld triples to the reservoir (fixed shape)
-            if len(hrows) > res_batch:
-                pick = rng.choice(len(hrows), res_batch, replace=False)
-                hrows, hcols, hvals = hrows[pick], hcols[pick], hvals[pick]
-            hu = np.zeros(res_batch, np.int32)
-            hi = np.zeros(res_batch, np.int32)
-            hr = np.zeros(res_batch, np.float32)
-            hu[:len(hrows)] = start_id + hrows
-            hi[:len(hrows)] = hcols
-            hr[:len(hrows)] = hvals
-            mon = monitor.reservoir_add(mon, next(keyseq), jnp.asarray(hu),
-                                        jnp.asarray(hi), jnp.asarray(hr),
-                                        jnp.int32(len(hrows)))
+            mon = _offer_holdout(mon, rng, next(keyseq), start_id,
+                                 hrows, hcols, hvals, res_batch)
 
         # ---- drift detection + refresh decision ----------------------------
         snap = monitor.holdout_snapshot(mon, bst)
@@ -381,7 +409,16 @@ def _serve_cf_lifecycle(args):
             delta = np.asarray(bst.state.ratings)[snap_u:cur_n]
             bst = buckets.fold_in_rows(new_bst, delta, bq, spec,
                                        args.min_bucket, args.growth)
-            caps_used.add(bst.capacity)
+            caps_used.add((bst.capacity, bst.state.graph.is_compact))
+            if policy.should_compact(rspec, bst.capacity):
+                # lifecycle-driven compaction: serve the uint16/bf16 graph
+                # until the next fold-in/growth widens it (docs/lifecycle.md)
+                bst = buckets.compact_state(bst)
+                caps_used.add((bst.capacity, True))
+                art_kb = (bst.state.graph.indices.nbytes
+                          + bst.state.graph.weights.nbytes) / 1024
+                print(f"wave {wave}: serving graph compacted "
+                      f"(uint16/bf16, {art_kb:.0f}KB resident)")
             new_cov = float(monitor.batch_coverage(
                 st_new.representation, jnp.ones(snap_u)))
             mon = monitor.rebase(mon, int(bst.n_valid), new_cov)
@@ -424,10 +461,13 @@ def _serve_cf_lifecycle(args):
         assert latest_step(ckpt_dir) == gen, (latest_step(ckpt_dir), gen)
         oracle = fit(jax.random.PRNGKey(gen),
                      RatingMatrix(jnp.asarray(rows), *rows.shape), spec)
+        og = oracle.graph
+        if landmark_state_meta(ckpt_dir, gen)["compact"]:
+            og = og.to_compact().to_full()  # artifact stored uint16/bf16
         exact = (np.array_equal(np.asarray(loaded.graph.indices),
-                                np.asarray(oracle.graph.indices))
+                                np.asarray(og.indices))
                  and np.array_equal(np.asarray(loaded.graph.weights),
-                                    np.asarray(oracle.graph.weights)))
+                                    np.asarray(og.weights)))
         print(f"swap oracle-exact vs from-scratch fit (gen {gen}): {exact}")
         assert exact, "swapped artifact diverged from a from-scratch fit"
     else:
@@ -437,6 +477,351 @@ def _serve_cf_lifecycle(args):
                 "smoke lifecycle replay must exercise a refresh; "
                 "tune --drift/--waves or the smoke RefreshSpec")
     print("cf lifecycle: done")
+
+
+# ------------------------------------------------------ cf lifecycle, sharded
+def _parse_mesh(arg: str):
+    """``pod=2,data=4`` -> (("pod", "data"), (2, 4))."""
+    names, sizes = [], []
+    for part in arg.split(","):
+        name, _, size = part.partition("=")
+        if not size:
+            raise ValueError(f"--mesh expects name=size pairs, got {part!r}")
+        names.append(name.strip())
+        sizes.append(int(size))
+    return tuple(names), tuple(sizes)
+
+
+def _foldin_replication_check(sst, bq, spec):
+    """Prove the sharded fold-in keeps the row space sharded: no aval inside a
+    shard_map body — and no non-shard_map eqn output anywhere — carries the
+    full (S*C) row dimension. Returns (n_avals_scanned, offenders)."""
+    from repro.core.landmark_cf import fold_in_sharded
+
+    rows = sst.state.ratings.shape[0]
+    p = sst.state.ratings.shape[1]
+    bq = min(bq, sst.capacity)  # driver grows capacity before bigger batches
+    fn = lambda s, nr: fold_in_sharded(s, nr, jnp.int32(1), jnp.int32(0), spec)
+    jaxpr = jax.make_jaxpr(fn)(sst, jnp.zeros((bq, p), jnp.float32))
+
+    seen, bad = [], []
+
+    def scan(jx, inside):
+        for eqn in jx.eqns:
+            is_sh = eqn.primitive.name == "shard_map"
+            passthrough = is_sh or eqn.primitive.name == "pjit"
+            if eqn.primitive.name == "sharding_constraint":
+                # pinning rows onto the mesh axes keeps them sharded; a
+                # constraint whose row dim is unpartitioned WOULD replicate
+                spec = getattr(eqn.params.get("sharding"), "spec", None)
+                passthrough = bool(spec and len(spec) and spec[0])
+            for v in eqn.outvars:
+                shp = getattr(v.aval, "shape", None) or ()
+                seen.append(shp)
+                # a shard_map/pjit eqn's *result* is the sharded array itself
+                # (their bodies are scanned recursively); any other eqn at
+                # full row size is a materialization
+                if shp and shp[0] >= rows and (inside or not passthrough):
+                    bad.append((eqn.primitive.name, shp))
+            for pv in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        pv, is_leaf=lambda x: hasattr(x, "jaxpr")
+                        or hasattr(x, "eqns")):
+                    ij = getattr(sub, "jaxpr", sub)
+                    if hasattr(ij, "eqns"):
+                        scan(ij, inside or is_sh)
+
+    scan(jaxpr.jaxpr, False)
+
+    # and the compiled executable must emit row-sharded outputs
+    comp = jax.jit(fn).lower(sst, jnp.zeros((bq, p), jnp.float32)).compile()
+    shs = jax.tree_util.tree_leaves(comp.output_shardings)
+    row_sharded = sum(
+        1 for s in shs
+        if getattr(s, "spec", None) and len(s.spec) and s.spec[0] == sst.axes)
+    return len(seen), bad, row_sharded
+
+
+def _serve_cf_lifecycle_sharded(args):
+    """The lifecycle replay on a mesh: fit_distributed → ShardedLandmarkState
+    serving → shard-local-append fold-in → monitor → distributed refresh →
+    swap, with a single-device shadow replay (same landmarks, same PRNG, same
+    arrival stream) asserting bit-identical predictions every wave."""
+    from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
+    from repro.core import LandmarkSpec, RatingMatrix, fit, knn
+    from repro.core.landmark_cf import fit_distributed, fold_in_sharded
+    from repro.data.synthetic import drifting_ratings
+    from repro.lifecycle import buckets, monitor, policy
+    from repro.lifecycle.monitor import _holdout_stats
+    from repro.lifecycle.refresh import RefreshManager
+    from repro.train.checkpoint import (landmark_state_meta, latest_step,
+                                        load_landmark_state,
+                                        save_landmark_state)
+
+    names, sizes = _parse_mesh(args.mesh)
+    need = int(np.prod(sizes))
+    if jax.device_count() < need:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {need} devices but jax sees "
+            f"{jax.device_count()}; on CPU launch a fresh process (the "
+            f"XLA_FLAGS host-platform override must precede jax init)")
+    mesh = jax.make_mesh(sizes, names)
+    axes = names
+    n_shards = need
+
+    arch = registry.get("landmark_cf")
+    spec: LandmarkSpec = arch.smoke_model if args.smoke else arch.model
+    spec = dataclasses.replace(spec, selection=args.selection)
+    rspec = SMOKE_REFRESH if args.smoke else REFRESH
+    if args.compact_serving:
+        print("--compact-serving is a single-device serving policy; "
+              "ignored under --mesh (the sharded artifact stays f32/int32)")
+    if args.smoke:
+        _clamp_lifecycle_smoke(args)
+    min_shard_bucket = max(8, args.min_bucket // n_shards)
+
+    stream = dict(n_waves=args.waves, drift=args.drift)
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="cf_sharded_")
+    rng = np.random.default_rng(0)
+    bq = args.foldin
+
+    families = {
+        "pair": knn.predict_pairs_graph,
+        "topn": knn.recommend_topn_graph,
+        "fold": fold_in_sharded,
+        "holdout": _holdout_stats,
+    }
+    cache0 = {name: fn._cache_size() for name, fn in families.items()}
+
+    # ---- base generation: fit_distributed + single-device shadow oracle ----
+    prev = latest_step(ckpt_dir)
+    gen0 = prev + 1 if prev is not None else 0
+    r0 = drifting_ratings(0, 0, args.users, args.items, **stream)
+    t0 = time.perf_counter()
+    st = fit_distributed(jax.random.PRNGKey(0), jnp.asarray(r0), spec, mesh,
+                         user_axes=axes)
+    jax.block_until_ready(st.graph.weights)
+    t_fit = time.perf_counter() - t0
+    save_landmark_state(ckpt_dir, st, step=gen0)
+    shadow_st = fit(jax.random.PRNGKey(0),
+                    RatingMatrix(jnp.asarray(r0), args.users, args.items), spec)
+    sst = buckets.from_state_sharded(st, mesh, axes, min_shard_bucket,
+                                     args.growth)
+    bst = buckets.from_state(shadow_st, args.min_bucket, args.growth)
+    # logical row id -> (shard, slot); slots survive capacity regrowth
+    u_per = -(-args.users // n_shards)
+    id_shard = (np.arange(args.users) // u_per).astype(np.int32)
+    id_slot = (np.arange(args.users) % u_per).astype(np.int32)
+    meta0 = landmark_state_meta(ckpt_dir, gen0)
+    print(f"gen {gen0}: fit_distributed U={args.users} over "
+          f"{'x'.join(f'{a}={s}' for a, s in zip(axes, sizes))} "
+          f"(S={n_shards}, u/shard={u_per}) n={spec.n_landmarks} "
+          f"k={st.graph.k} in {t_fit*1e3:.0f}ms; per-shard bucket "
+          f"C={sst.capacity} (min={min_shard_bucket} x{args.growth:g}); "
+          f"checkpoint row shards: {meta0['row_shards']} -> {ckpt_dir}")
+
+    # ---- one-time proof: fold-in never materializes replicated (U, n) ------
+    n_avals, offenders, row_sharded = _foldin_replication_check(sst, bq, spec)
+    print(f"fold-in sharding check: {n_avals} avals scanned, "
+          f"{len(offenders)} full-row materializations, "
+          f"{row_sharded} row-sharded outputs")
+    assert not offenders, offenders
+    assert row_sharded >= 4, "rep/ratings/graph outputs must stay row-sharded"
+
+    def sharded_ids(logical):
+        return jnp.asarray(id_shard[logical] * sst.capacity
+                           + id_slot[logical])
+
+    def id_map_arr():
+        m = np.zeros(n_shards * sst.capacity, np.int32)
+        n = len(id_shard)
+        m[:n] = id_shard * sst.capacity + id_slot
+        return jnp.asarray(m)
+
+    base_cov = float(monitor.batch_coverage(
+        shadow_st.representation, jnp.ones(args.users)))
+    mon = monitor.init_monitor(rspec.reservoir, args.users, base_cov)
+    pol = policy.PolicyState(generation=gen0)
+    manager = RefreshManager(ckpt_dir, spec, mesh=mesh, row_axes=axes)
+    pending = None
+    swap_wave = pre_post = None
+    identical_waves = 0
+    caps_sh, caps_lo = {sst.capacity}, {bst.capacity}
+    res_batch = rspec.reservoir
+    keyseq = iter(jax.random.split(jax.random.PRNGKey(42), 2 * args.waves + 8))
+
+    for wave in range(args.waves):
+        # ---- bit-identity probe vs the single-device shadow ----------------
+        prng = np.random.default_rng(10_000 + wave)
+        n_live = len(id_shard)
+        pu = prng.integers(0, n_live, args.batch).astype(np.int32)
+        pi = jnp.asarray(prng.integers(0, args.items,
+                                       args.batch).astype(np.int32))
+        p_sh = np.asarray(buckets.predict_pairs_sharded(
+            sst, sharded_ids(pu), pi))
+        p_lo = np.asarray(buckets.predict_pairs(bst, jnp.asarray(pu), pi))
+        t_sh, s_sh = buckets.recommend_topn_sharded(
+            sst, sharded_ids(pu), n=args.topn)
+        t_lo, s_lo = buckets.recommend_topn(bst, jnp.asarray(pu),
+                                            n=args.topn)
+        same = (np.array_equal(p_sh, p_lo)
+                and np.array_equal(np.asarray(t_sh), np.asarray(t_lo))
+                and np.array_equal(np.asarray(s_sh), np.asarray(s_lo)))
+        identical_waves += bool(same)
+        assert same, (
+            f"wave {wave}: sharded predictions diverged from the "
+            f"single-device shadow (max |Δ|={np.abs(p_sh - p_lo).max()})")
+
+        # ---- timed requests on the sharded path (probe above was the warm) -
+        pair_ts, topn_ts = [], []
+        for _ in range(args.requests):
+            qu = sharded_ids(rng.integers(0, n_live,
+                                          args.batch).astype(np.int32))
+            qi = jnp.asarray(rng.integers(0, args.items,
+                                          args.batch).astype(np.int32))
+            t0 = time.perf_counter()
+            out = buckets.predict_pairs_sharded(sst, qu, qi)
+            jax.block_until_ready(out)
+            pair_ts.append(time.perf_counter() - t0)
+        if not bool(jnp.isfinite(out).all()):
+            raise RuntimeError("non-finite predictions in sharded wave")
+        for _ in range(max(1, args.requests // 4)):
+            qu = sharded_ids(rng.integers(0, n_live,
+                                          args.batch).astype(np.int32))
+            t0 = time.perf_counter()
+            items_r, _ = buckets.recommend_topn_sharded(sst, qu, n=args.topn)
+            jax.block_until_ready(items_r)
+            topn_ts.append(time.perf_counter() - t0)
+        p50, p95 = _percentiles(pair_ts)
+        t50, t95 = _percentiles(topn_ts)
+
+        # ---- arrivals: fold into BOTH states, reservoir keeps logical ids --
+        if wave + 1 < args.waves:
+            arr = drifting_ratings(0, wave + 1, args.arrivals, args.items,
+                                   **stream)
+            train, hrows, hcols, hvals = _withhold(rng, arr,
+                                                   rspec.holdout_frac)
+            start_logical = n_live
+            sst, fsh, fsl = buckets.fold_in_rows_sharded(
+                sst, train, bq, spec, min_shard_bucket, args.growth)
+            caps_sh.add(sst.capacity)
+            id_shard = np.concatenate([id_shard, fsh])
+            id_slot = np.concatenate([id_slot, fsl])
+            bst = buckets.fold_in_rows(bst, train, bq, spec,
+                                       args.min_bucket, args.growth)
+            caps_lo.add(bst.capacity)
+            rep_rows = sst.state.representation[
+                jnp.asarray(fsh * sst.capacity + fsl)]
+            mon = monitor.observe_fold_in(mon, rep_rows, jnp.int32(len(train)))
+            mon = _offer_holdout(mon, rng, next(keyseq), start_logical,
+                                 hrows, hcols, hvals, res_batch)
+
+        # ---- drift detection + distributed refresh -------------------------
+        snap = monitor.holdout_snapshot_sharded(mon, sst, id_map_arr())
+        if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
+            pol.base_mae = snap.mae
+        fire, reasons = policy.decide(pol, rspec, snap)
+        if fire:
+            gen = pol.generation + 1
+            ids = id_shard.astype(np.int64) * sst.capacity + id_slot
+            rows = np.asarray(sst.state.ratings)[ids]  # logical row order
+            if manager.request(rows, gen):
+                policy.on_fire(pol)
+                pending = (gen, rows)
+                print(f"wave {wave}: gen {pol.generation} refresh -> gen {gen}"
+                      f" launched on the mesh ({'; '.join(reasons)})")
+
+        # ---- poll; swap BOTH replicas when the refit commits ---------------
+        done = manager.poll()
+        if done is None and wave == args.waves - 1 and manager.busy:
+            manager.join()
+            done = manager.poll()
+        if done is not None:
+            gen, st_new = done
+            mae_pre = snap.mae
+            snap_u = st_new.ratings.shape[0]
+            cur_n = len(id_shard)
+            old_ids = id_shard.astype(np.int64) * sst.capacity + id_slot
+            delta = np.asarray(sst.state.ratings)[old_ids[snap_u:cur_n]]
+            # oracle: committed sharded artifact == single-device fit
+            gen_p, rows_p = pending
+            assert gen_p == gen
+            oracle = fit(jax.random.PRNGKey(gen),
+                         RatingMatrix(jnp.asarray(rows_p), *rows_p.shape),
+                         spec)
+            loaded = load_landmark_state(ckpt_dir, step=gen)
+            exact = (np.array_equal(np.asarray(loaded.graph.indices),
+                                    np.asarray(oracle.graph.indices))
+                     and np.array_equal(np.asarray(loaded.graph.weights),
+                                        np.asarray(oracle.graph.weights)))
+            assert exact, ("distributed refresh artifact diverged from the "
+                           "single-device from-scratch fit")
+            # swap the sharded replica + rebuild the logical id map
+            sst = buckets.from_state_sharded(st_new, mesh, axes,
+                                             min_shard_bucket, args.growth)
+            u_per = -(-snap_u // n_shards)
+            id_shard = (np.arange(snap_u) // u_per).astype(np.int32)
+            id_slot = (np.arange(snap_u) % u_per).astype(np.int32)
+            sst, fsh, fsl = buckets.fold_in_rows_sharded(
+                sst, delta, bq, spec, min_shard_bucket, args.growth)
+            caps_sh.add(sst.capacity)
+            id_shard = np.concatenate([id_shard, fsh])
+            id_slot = np.concatenate([id_slot, fsl])
+            # swap the shadow replica through ITS single-device fit
+            bst = buckets.from_state(oracle, args.min_bucket, args.growth)
+            bst = buckets.fold_in_rows(bst, delta, bq, spec,
+                                       args.min_bucket, args.growth)
+            caps_lo.add(bst.capacity)
+            new_cov = float(monitor.batch_coverage(
+                st_new.representation, jnp.ones(snap_u)))
+            mon = monitor.rebase(mon, len(id_shard), new_cov)
+            snap, reasons = monitor.holdout_snapshot_sharded(
+                mon, sst, id_map_arr()), []
+            mae_post = snap.mae
+            policy.on_swap(pol, gen, mae_post, rspec)
+            pending = None
+            swap_wave, pre_post = wave, (mae_pre, mae_post)
+            print(f"wave {wave}: swapped in gen {gen} on all {n_shards} "
+                  f"shards (U={snap_u}+{len(delta)} delta, oracle-exact, "
+                  f"serving uninterrupted) holdout MAE "
+                  f"{mae_pre:.4f} -> {mae_post:.4f}")
+
+        fills = np.asarray(sst.n_valid)
+        print(f"wave {wave}: gen {pol.generation} U={len(id_shard)} "
+              f"shards[{fills.min()}..{fills.max()}]/cap{sst.capacity} "
+              f"predict {args.requests}x{args.batch} pairs p50={p50:.2f}ms "
+              f"p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
+              f"p95={t95:.2f}ms | mae={snap.mae:.4f} "
+              f"cov={snap.coverage_ratio:.2f} fold={snap.foldin_frac:.2f} | "
+              f"bit-identical: {bool(same)}"
+              + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
+
+    # ---- replay report -----------------------------------------------------
+    counts = {name: fn._cache_size() - cache0[name]
+              for name, fn in families.items()}
+    budget = len(caps_sh) + len(caps_lo)  # sharded + shadow executables
+    print(f"executables per request-path family: {counts} (per-shard buckets:"
+          f" {sorted(caps_sh)}, shadow buckets: {sorted(caps_lo)})")
+    assert max(counts.values()) <= budget, (
+        f"recompile count {counts} exceeds bucket budget {budget} — the "
+        "sharded steps must compile once per (capacity, batch) like the "
+        "single-device path")
+    print(f"predictions bit-identical to the single-device run: "
+          f"{identical_waves}/{args.waves} waves")
+    assert identical_waves == args.waves
+    if pre_post is not None:
+        mae_pre, mae_post = pre_post
+        print(f"refresh: fired gen {pol.generation} at wave {swap_wave}, "
+              f"holdout MAE {mae_pre:.4f} -> {mae_post:.4f}")
+        assert mae_post <= mae_pre + 1e-6, (
+            "refresh must not degrade holdout MAE on the drifting stream")
+    else:
+        print("refresh: never fired (stream did not drift past thresholds)")
+        if args.smoke:
+            raise AssertionError(
+                "sharded smoke replay must exercise a distributed refresh; "
+                "tune --drift/--waves or the smoke RefreshSpec")
+    print("cf sharded lifecycle: done")
 
 
 def main(argv=None):
@@ -485,9 +870,28 @@ def main(argv=None):
                     "(coresets: reselection follows the drifted population)")
     ap.add_argument("--compact", action="store_true",
                     help="cf: store the artifact as uint16 ids + bf16 weights")
+    ap.add_argument("--compact-serving", action="store_true",
+                    help="lifecycle: after each refresh swap, serve (and "
+                    "checkpoint) the compact uint16/bf16 graph while the "
+                    "capacity fits uint16; widened back on growth "
+                    "(lifecycle.policy.should_compact)")
+    ap.add_argument("--mesh", default=None,
+                    help="lifecycle: run the replay sharded over this mesh, "
+                    "e.g. pod=2,data=4 (rows block-partitioned over all "
+                    "listed axes). On CPU the host platform is forced to "
+                    "that many devices, so CI can smoke a pod.")
     ap.add_argument("--graph-backend", default="auto",
                     choices=("auto", "dense", "streaming", "pallas"))
     args = ap.parse_args(argv)
+    if args.mesh:
+        # must precede first backend use: force a host-platform device count
+        # big enough for the mesh (no-op when XLA_FLAGS already forces one)
+        _, sizes = _parse_mesh(args.mesh)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count="
+                f"{int(np.prod(sizes))} " + flags)
     if args.batch is None:
         args.batch = 256 if args.workload == "cf" else 4
     if args.waves is None:
@@ -495,7 +899,12 @@ def main(argv=None):
     args.requests = max(1, args.requests)  # the wave loops time at least one
 
     if args.workload == "cf":
-        _serve_cf_lifecycle(args) if args.lifecycle else _serve_cf(args)
+        if args.lifecycle and args.mesh:
+            _serve_cf_lifecycle_sharded(args)
+        elif args.lifecycle:
+            _serve_cf_lifecycle(args)
+        else:
+            _serve_cf(args)
     else:
         _serve_lm(args)
 

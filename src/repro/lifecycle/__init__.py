@@ -4,7 +4,9 @@ The paper's pitch is that landmarks make the similarity structure cheap enough
 to *rebuild*; this package is the production loop that actually rebuilds it:
 
 - ``buckets``  — capacity-padded :class:`BucketedState` so the jitted serve
-  steps compile once per geometric bucket, not once per fold-in.
+  steps compile once per geometric bucket, not once per fold-in; the same
+  schedule applied *per mesh shard* for ``core.ShardedLandmarkState``
+  (``from_state_sharded`` / ``fold_in_rows_sharded`` — docs/distributed_serving.md).
 - ``monitor``  — jittable running stats from served traffic (holdout MAE/RMSE
   reservoir, fold-in volume, landmark coverage of arrivals).
 - ``policy``   — :class:`RefreshSpec` thresholds + hysteresis turning those
@@ -20,40 +22,54 @@ from .buckets import (
     BucketedState,
     bucket_capacity,
     bucket_schedule,
+    compact_state,
     ensure_capacity,
+    ensure_capacity_sharded,
     fold_in_bucketed,
     fold_in_rows,
+    fold_in_rows_sharded,
     from_state,
+    from_state_sharded,
     predict_pairs,
+    predict_pairs_sharded,
     recommend_topn,
+    recommend_topn_sharded,
 )
 from .monitor import (
     MonitorState,
     Snapshot,
     batch_coverage,
     holdout_snapshot,
+    holdout_snapshot_sharded,
     init_monitor,
     observe_fold_in,
     rebase,
     reservoir_add,
 )
-from .policy import PolicyState, RefreshSpec, decide
+from .policy import PolicyState, RefreshSpec, decide, should_compact
 from .refresh import RefreshManager
 
 __all__ = [
     "BucketedState",
     "bucket_capacity",
     "bucket_schedule",
+    "compact_state",
     "ensure_capacity",
+    "ensure_capacity_sharded",
     "fold_in_bucketed",
     "fold_in_rows",
+    "fold_in_rows_sharded",
     "from_state",
+    "from_state_sharded",
     "predict_pairs",
+    "predict_pairs_sharded",
     "recommend_topn",
+    "recommend_topn_sharded",
     "MonitorState",
     "Snapshot",
     "batch_coverage",
     "holdout_snapshot",
+    "holdout_snapshot_sharded",
     "init_monitor",
     "observe_fold_in",
     "rebase",
@@ -61,5 +77,6 @@ __all__ = [
     "PolicyState",
     "RefreshSpec",
     "decide",
+    "should_compact",
     "RefreshManager",
 ]

@@ -87,21 +87,27 @@ class BucketedState:
 def _pad_rows(x: jax.Array, capacity: int) -> jax.Array:
     pad = capacity - x.shape[0]
     assert pad >= 0, (x.shape, capacity)
-    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
+    # pad == 0 still copies: the padded state feeds the *donating* fold step,
+    # which must never alias the caller's source arrays (jnp.pad already
+    # allocates fresh buffers on the pad > 0 path)
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad \
+        else x.copy()
 
 
 def _pad_state(state: LandmarkState, capacity: int) -> LandmarkState:
     """Zero-pad every user-indexed array to ``capacity`` rows.
 
     Zero filler is inert by construction: zero rating rows have mask 0 and
-    mean 0, zero graph rows have weight 0.
+    mean 0, zero graph rows have weight 0. No output leaf aliases an input
+    leaf (``landmark_idx`` is copied outright) — donation safety, see
+    :func:`fold_in_bucketed`.
     """
     if state.graph is None:
         raise ValueError("bucketed serving needs a graph-backed state; "
                          "dense-sims states must refit")
     graph = state.graph.to_full() if state.graph.is_compact else state.graph
     return LandmarkState(
-        state.landmark_idx,
+        state.landmark_idx.copy(),
         _pad_rows(state.representation, capacity),
         _pad_rows(state.ratings, capacity),
         graph=NeighborGraph(_pad_rows(graph.indices, capacity),
@@ -111,7 +117,12 @@ def _pad_state(state: LandmarkState, capacity: int) -> LandmarkState:
 
 def from_state(state: LandmarkState, min_bucket: int = DEFAULT_MIN_BUCKET,
                growth: float = DEFAULT_GROWTH) -> BucketedState:
-    """Wrap a fitted state into the smallest bucket that holds it."""
+    """Wrap a fitted state into the smallest bucket that holds it.
+
+    The wrapped state shares no buffers with ``state``: ``fold_in_bucketed``
+    donates its input, and an aliased leaf would let the first fold-in
+    delete the caller's fitted state under them.
+    """
     u = state.ratings.shape[0]
     cap = bucket_capacity(u, min_bucket, growth)
     return BucketedState(_pad_state(state, cap), jnp.int32(u))
@@ -132,7 +143,7 @@ def ensure_capacity(bstate: BucketedState, incoming: int,
     return BucketedState(_pad_state(bstate.state, cap), bstate.n_valid), True
 
 
-@partial(jax.jit, static_argnames=("spec",))
+@partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def fold_in_bucketed(
     bstate: BucketedState,
     new_ratings: jax.Array,  # (bq, P) batch bucket; rows >= b_valid are filler
@@ -146,6 +157,13 @@ def fold_in_bucketed(
     see ``extend_neighbor_graph_bucketed`` for the masking. The caller must
     guarantee ``n_valid + bq <= capacity`` (``ensure_capacity``). Compiles
     once per (capacity, bq) pair.
+
+    The incoming ``bstate`` buffers are **donated**: every array is
+    capacity-stable (same shape/dtype in and out), so XLA aliases the output
+    ratings/rep/graph onto the inputs and the update stops paying a second
+    copy of the state in HBM traffic. Callers must treat the passed-in state
+    as consumed (every in-repo caller rebinds ``bstate =``). On backends
+    without donation (CPU) this is a no-op.
     """
     st = bstate.state
     n_valid = bstate.n_valid
@@ -204,3 +222,167 @@ def recommend_topn(bstate: BucketedState, users: jax.Array, n: int = 10):
     """Serve-path top-N with the padded-row mask threaded through."""
     return knn.recommend_topn_graph(bstate.state.graph, bstate.state.ratings,
                                     users, n=n, n_valid=bstate.n_valid)
+
+
+def compact_state(bstate: BucketedState) -> BucketedState:
+    """Swap the serving graph to the compact (uint16/bf16) artifact.
+
+    Policy-gated by ``lifecycle.policy.should_compact`` (capacity < 65536);
+    predictions consume the compact graph directly, and the next capacity
+    growth or bucketed fold-in widens it back (``_pad_state`` /
+    ``extend_neighbor_graph_bucketed`` both call ``to_full``).
+    """
+    st = bstate.state
+    if st.graph is None or st.graph.is_compact:
+        return bstate
+    return BucketedState(
+        LandmarkState(st.landmark_idx, st.representation, st.ratings,
+                      graph=st.graph.to_compact()),
+        bstate.n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving: the per-shard capacity schedule + host-side fold drivers
+# for a ShardedLandmarkState (core.landmark_cf). Each mesh shard carries its
+# own capacity-C block and fill count; the geometric schedule now bounds the
+# PER-SHARD padded shapes, so one executable per (C, bq) serves the pod.
+# ---------------------------------------------------------------------------
+
+
+def from_state_sharded(state: LandmarkState, mesh, row_axes=("pod", "data"),
+                       min_bucket: int = 32, growth: float = DEFAULT_GROWTH
+                       ) -> "ShardedLandmarkState":
+    """Block-partition a fitted (contiguous) state onto the mesh.
+
+    Dense row g lands on shard ``g // u_per`` at slot ``g % u_per``
+    (u_per = ceil(U / S) — the ``streaming_knn_graph_sharded`` linearization),
+    each shard block is padded to the smallest per-shard bucket capacity, and
+    graph neighbor ids + ``landmark_idx`` are remapped into the sharded id
+    space. Capacity is clamped to ``>= k`` so every shard can produce a full
+    local candidate list during fold-in.
+    """
+    import numpy as np
+
+    from repro.core.landmark_cf import ShardedLandmarkState
+    from repro.distributed import sharding as shd
+
+    if state.graph is None:
+        raise ValueError("sharded serving needs a graph-backed state; "
+                         "dense-sims states must refit")
+    graph = state.graph.to_full() if state.graph.is_compact else state.graph
+    axes = shd.cf_row_axes(mesh, row_axes)
+    s = shd.cf_shard_count(mesh, axes)
+    u = state.ratings.shape[0]
+    u_per = -(-u // s)
+    cap = bucket_capacity(max(u_per, graph.k), min_bucket, growth)
+
+    remap = lambda ids: shd.dense_to_sharded_ids(np.asarray(ids), u_per, cap)
+    pack = lambda x: shd.pack_row_blocks(np.asarray(x), s, u_per, cap)
+    row_sh = shd.cf_row_sharding(mesh, axes)
+    rep = jax.device_put(pack(state.representation), row_sh)
+    ratings = jax.device_put(pack(state.ratings), row_sh)
+    gi = jax.device_put(pack(remap(graph.indices)), row_sh)
+    gw = jax.device_put(pack(graph.weights), row_sh)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    idx = jax.device_put(remap(state.landmark_idx).astype(np.int32), repl)
+    n_valid = np.clip(u - np.arange(s) * u_per, 0, u_per).astype(np.int32)
+    rank = jax.device_put(pack(np.arange(u, dtype=np.int32)),
+                          shd.cf_row_sharding(mesh, axes, ndim=1))
+    return ShardedLandmarkState(
+        LandmarkState(idx, rep, ratings, graph=NeighborGraph(gi, gw)),
+        jax.device_put(n_valid, repl), rank, mesh, axes)
+
+
+def ensure_capacity_sharded(sstate, target: int, incoming: int,
+                            min_bucket: int = 32,
+                            growth: float = DEFAULT_GROWTH):
+    """Host-side growth check before a sharded fold-in of ``incoming`` rows
+    onto shard ``target``. When the target block overflows, EVERY shard block
+    is re-padded to the next capacity on the schedule and graph ids are
+    remapped (one deliberate recompile, same as the single-device schedule).
+    Returns ``(sstate, grew)``.
+    """
+    import numpy as np
+
+    from repro.core.landmark_cf import ShardedLandmarkState
+    from repro.distributed import sharding as shd
+
+    n_valid = np.asarray(sstate.n_valid)
+    cap = sstate.capacity
+    if int(n_valid[target]) + incoming <= cap:
+        return sstate, False
+    s = sstate.shard_count
+    new_cap = bucket_capacity(int(n_valid[target]) + incoming, min_bucket,
+                              growth)
+    st = sstate.state
+    graph = st.graph.to_full() if st.graph.is_compact else st.graph
+    repack = lambda x: shd.repack_row_blocks(np.asarray(x), s, cap, new_cap)
+    row_sh = shd.cf_row_sharding(sstate.mesh, sstate.axes)
+    rep = jax.device_put(repack(st.representation), row_sh)
+    ratings = jax.device_put(repack(st.ratings), row_sh)
+    gi = jax.device_put(
+        repack(shd.remap_block_ids(np.asarray(graph.indices), cap, new_cap)),
+        row_sh)
+    gw = jax.device_put(repack(graph.weights), row_sh)
+    repl = jax.sharding.NamedSharding(sstate.mesh,
+                                      jax.sharding.PartitionSpec())
+    idx = jax.device_put(
+        shd.remap_block_ids(np.asarray(st.landmark_idx), cap, new_cap), repl)
+    rank = jax.device_put(repack(sstate.row_rank),
+                          shd.cf_row_sharding(sstate.mesh, sstate.axes,
+                                              ndim=1))
+    return ShardedLandmarkState(
+        LandmarkState(idx, rep, ratings, graph=NeighborGraph(gi, gw)),
+        sstate.n_valid, rank, sstate.mesh, sstate.axes), True
+
+
+def fold_in_rows_sharded(sstate, rows, bq: int, spec: LandmarkSpec,
+                         min_bucket: int = 32,
+                         growth: float = DEFAULT_GROWTH):
+    """Host-side sharded fold-in driver: pick the least-loaded shard per
+    ``bq``-sized batch (ties → lowest shard index, so placement is
+    reproducible), reserve capacity, fold through the jitted
+    ``core.fold_in_sharded`` step. Returns ``(sstate, shards, slots)`` — the
+    (shard, slot) landing position of every row, from which callers derive
+    sharded row ids as ``shard * capacity + slot`` (slots are stable across
+    capacity regrowth; ids are not).
+    """
+    import numpy as np
+
+    from repro.core.landmark_cf import fold_in_sharded
+
+    n = len(rows)
+    p = sstate.state.ratings.shape[1]
+    rows = jnp.asarray(rows)
+    shards = np.zeros(n, np.int32)
+    slots = np.zeros(n, np.int32)
+    for lo in range(0, n, bq):
+        chunk = rows[lo:lo + bq]
+        m = chunk.shape[0]
+        fills = np.asarray(sstate.n_valid)
+        target = int(np.argmin(fills))
+        sstate, _ = ensure_capacity_sharded(sstate, target, bq, min_bucket,
+                                            growth)
+        shards[lo:lo + m] = target
+        slots[lo:lo + m] = int(fills[target]) + np.arange(m)
+        padded = jnp.zeros((bq, p), jnp.float32).at[:m].set(chunk)
+        sstate = fold_in_sharded(sstate, padded, jnp.int32(m),
+                                 jnp.int32(target), spec)
+    return sstate, shards, slots
+
+
+def predict_pairs_sharded(sstate, users: jax.Array, items: jax.Array
+                          ) -> jax.Array:
+    """Pair predictions on a ShardedLandmarkState. ``users`` are *sharded*
+    row ids (``shard * capacity + slot``); the per-shard fill counts mask
+    padded rows exactly like ``n_valid`` does on the single-device path."""
+    return knn.predict_pairs_graph(sstate.state.graph, sstate.state.ratings,
+                                   users, items, n_valid=sstate.n_valid,
+                                   shard_cap=sstate.capacity)
+
+
+def recommend_topn_sharded(sstate, users: jax.Array, n: int = 10):
+    """Top-N on a ShardedLandmarkState (sharded user ids, see above)."""
+    return knn.recommend_topn_graph(sstate.state.graph, sstate.state.ratings,
+                                    users, n=n, n_valid=sstate.n_valid,
+                                    shard_cap=sstate.capacity)

@@ -19,6 +19,7 @@ Three signals, all cheap enough to update on the serve path:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -145,13 +146,22 @@ def reservoir_add(mon: MonitorState, key: jax.Array, users: jax.Array,
                                res_filled=filled, res_seen=seen)
 
 
-@jax.jit
-def _holdout_stats(mon: MonitorState, graph, ratings, n_valid):
+@partial(jax.jit, static_argnames=("shard_cap",))
+def _holdout_stats(mon: MonitorState, graph, ratings, n_valid, id_map=None,
+                   shard_cap=None):
+    """Reservoir MAE/RMSE under the current artifact.
+
+    On the sharded path the reservoir keeps *logical* user ids (stable across
+    capacity regrowth and refresh repacking); ``id_map`` — a capacity-padded
+    logical→sharded row-id table — translates them, and ``shard_cap`` routes
+    the per-shard fill mask through ``predict_pairs_graph``."""
     slot_valid = jnp.arange(mon.reservoir_size) < mon.res_filled
     users = jnp.where(slot_valid, mon.res_users, 0)
+    if id_map is not None:
+        users = id_map[users]
     items = jnp.where(slot_valid, mon.res_items, 0)
     preds = knn.predict_pairs_graph(graph, ratings, users, items,
-                                    n_valid=n_valid)
+                                    n_valid=n_valid, shard_cap=shard_cap)
     err = (preds - mon.res_ratings) * slot_valid
     cnt = jnp.maximum(jnp.sum(slot_valid.astype(jnp.float32)), 1.0)
     mae = jnp.sum(jnp.abs(err)) / cnt
@@ -168,6 +178,24 @@ def holdout_snapshot(mon: MonitorState, bstate) -> Snapshot:
     """
     mae, rmse, cnt, frac, cov, base = _holdout_stats(
         mon, bstate.state.graph, bstate.state.ratings, bstate.n_valid)
+    base = float(base)
+    return Snapshot(
+        mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),
+        foldin_frac=float(frac), coverage=float(cov),
+        coverage_ratio=float(cov) / max(base, 1e-9),
+    )
+
+
+def holdout_snapshot_sharded(mon: MonitorState, sstate, id_map) -> Snapshot:
+    """:func:`holdout_snapshot` for a ShardedLandmarkState.
+
+    ``id_map`` is a (S·C,) int32 table mapping logical user ids (what the
+    reservoir stores) to sharded row ids — rebuilt by the serve loop on
+    growth/refresh, padded to the row capacity so the executable is shared
+    per (reservoir, capacity) pair like the single-device snapshot."""
+    mae, rmse, cnt, frac, cov, base = _holdout_stats(
+        mon, sstate.state.graph, sstate.state.ratings, sstate.n_valid,
+        id_map, shard_cap=sstate.capacity)
     base = float(base)
     return Snapshot(
         mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),

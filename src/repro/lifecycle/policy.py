@@ -27,6 +27,9 @@ class RefreshSpec:
     min_holdout: int = 32  # ignore the MAE signal below this reservoir fill
     reservoir: int = 512  # withheld-rating reservoir size
     holdout_frac: float = 0.2  # fraction of each arrival's ratings withheld
+    compact_serving: bool = False  # after a refresh swap, serve the uint16/
+    #                                bf16 compact graph (widened on growth)
+    compact_max_rows: int = 65536  # uint16 id ceiling for compaction
 
 
 @dataclasses.dataclass
@@ -67,6 +70,14 @@ def decide(pol: PolicyState, spec: RefreshSpec, snap: Snapshot
     if pol.refreshing or pol.streak < spec.patience:
         return False, reasons
     return True, reasons
+
+
+def should_compact(spec: RefreshSpec, n_rows: int) -> bool:
+    """Lifecycle-driven compaction gate: serve (and checkpoint) the compact
+    uint16/bf16 graph after a refresh commit, but only while every row id
+    fits a uint16 (``n_rows`` is the padded capacity — the id space, not the
+    fill). Growth past the ceiling widens and stays wide."""
+    return spec.compact_serving and n_rows < spec.compact_max_rows
 
 
 def on_fire(pol: PolicyState) -> None:

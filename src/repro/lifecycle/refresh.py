@@ -9,6 +9,13 @@ atomic rename means a crash mid-refresh leaves the previous generation as the
 loadable artifact, and generations are monotone by construction
 (``RefreshManager.request`` refuses non-increasing ones).
 
+With a ``mesh``, the refit runs ``fit_distributed`` instead — users
+block-partitioned over the mesh row axes, the d2/kNN step an all-gather
+streaming scan — and the committed checkpoint stores one tensor file per
+addressable row shard (the generic sharded machinery). ``fit_distributed``
+is itself oracle-exact against ``fit`` (same landmarks, same PRNG; see
+tests/test_sharded_serving.py), so the oracle property below is unchanged.
+
 Oracle property (tested): the swapped artifact is bit-identical to a
 from-scratch ``fit`` with the same key on the same accumulated matrix —
 refresh is a *schedule* for refitting, never a different algorithm.
@@ -22,7 +29,7 @@ import jax
 import numpy as np
 
 from repro.core import RatingMatrix, fit
-from repro.core.landmark_cf import LandmarkState
+from repro.core.landmark_cf import LandmarkState, fit_distributed
 from repro.core.types import LandmarkSpec
 from repro.train.checkpoint import save_landmark_state
 
@@ -34,14 +41,26 @@ class RefreshManager:
     ``poll`` returns ``(generation, state)`` exactly once when a refit has
     committed (the serve loop swaps its working state then). Thread errors
     surface on the next ``poll`` rather than dying silently.
+
+    ``mesh`` (+ ``row_axes``) routes the refit through ``fit_distributed``
+    and commits a row-sharded checkpoint; ``compact`` stores the uint16/bf16
+    graph, gated by ``compact_max_rows`` — pass
+    ``RefreshSpec.compact_max_rows`` so the checkpoint side agrees with the
+    serving-side ``policy.should_compact`` gate (silently skipped once U
+    outgrows the ceiling — the "widen on growth" half of lifecycle-driven
+    compaction).
     """
 
     def __init__(self, ckpt_dir: str, spec: LandmarkSpec, *,
-                 compact: bool = False, keep: int = 3):
+                 compact: bool = False, compact_max_rows: int = 65536,
+                 keep: int = 3, mesh=None, row_axes=("pod", "data")):
         self.ckpt_dir = ckpt_dir
         self.spec = spec
         self.compact = compact
+        self.compact_max_rows = compact_max_rows
         self.keep = keep
+        self.mesh = mesh
+        self.row_axes = row_axes
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._result: Optional[Tuple[int, LandmarkState]] = None
@@ -72,10 +91,15 @@ class RefreshManager:
 
         def work():
             try:
-                st = fit(k, RatingMatrix(jax.numpy.asarray(r), r.shape[0],
-                                         r.shape[1]), self.spec)
+                if self.mesh is not None:
+                    st = fit_distributed(k, jax.numpy.asarray(r), self.spec,
+                                         self.mesh, user_axes=self.row_axes)
+                else:
+                    st = fit(k, RatingMatrix(jax.numpy.asarray(r), r.shape[0],
+                                             r.shape[1]), self.spec)
                 jax.block_until_ready(st.graph.weights)
-                save_landmark_state(self.ckpt_dir, st, compact=self.compact,
+                compact = self.compact and r.shape[0] < self.compact_max_rows
+                save_landmark_state(self.ckpt_dir, st, compact=compact,
                                     step=generation, keep=self.keep)
                 with self._lock:
                     self._result = (generation, st)

@@ -146,6 +146,13 @@ def save_landmark_state(directory: str, state, *, compact: bool = False,
 
     ``compact=True`` stores the graph as uint16 ids + bf16 weights (half the
     artifact bytes; requires U < 65536 — see ``NeighborGraph.to_compact``).
+
+    A state fitted on a mesh (``fit_distributed``) saves **one tensor file
+    per addressable row shard** plus the single manifest — the generic
+    sharded machinery above, same tmp-dir + atomic-rename crash story. The
+    sidecar records the shard count so operators can see what is on disk;
+    ``load_landmark_state(..., mesh=...)`` re-places the rows onto whatever
+    mesh serves next (elastic across shard counts).
     """
     graph = state.graph
     if compact and graph is not None:
@@ -160,8 +167,12 @@ def save_landmark_state(directory: str, state, *, compact: bool = False,
         tree["graph_weights"] = graph.weights
     if state.sims is not None:
         tree["sims"] = state.sims
+    rep = state.representation
+    row_shards = (len({(s.index[0].start or 0) for s in rep.addressable_shards})
+                  if isinstance(rep, jax.Array) and rep.ndim else 1)
     meta = {"kind": "landmark_state", "fields": sorted(tree),
-            "compact": bool(compact and graph is not None)}
+            "compact": bool(compact and graph is not None),
+            "row_shards": row_shards}
     return save_checkpoint(directory, step, tree, keep=keep,
                            extra_files={"state.json": json.dumps(meta)})
 
@@ -177,19 +188,32 @@ def landmark_state_meta(directory: str, step: Optional[int] = None) -> Dict:
 
 
 def load_landmark_state(directory: str, step: Optional[int] = None,
-                        *, widen: bool = True):
+                        *, widen: bool = True, mesh=None,
+                        row_axes=("pod", "data")):
     """Rebuild a ``LandmarkState`` from ``save_landmark_state`` output.
 
     ``widen=True`` returns the canonical int32/f32 graph even if the artifact
     was stored compact (predictions accept either; fold-in widens anyway).
+    ``mesh`` re-places every row-indexed leaf block-partitioned over the
+    mesh's ``row_axes`` (``PartitionSpec(axes, None)``) — elastic: the
+    on-disk shard count need not match the serving mesh.
     """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
     from repro.core.landmark_cf import LandmarkState
     from repro.core.types import NeighborGraph
 
     step = step if step is not None else latest_step(directory)
     meta = landmark_state_meta(directory, step)
+    shardings = None
+    if mesh is not None:
+        axes = tuple(a for a in row_axes if a in mesh.axis_names)
+        row = NamedSharding(mesh, P(axes, None))
+        replicated = NamedSharding(mesh, P(None))  # (n,) landmark ids
+        shardings = {f: (replicated if f == "landmark_idx" else row)
+                     for f in meta["fields"]}
     tree = restore_checkpoint(directory, {f: 0 for f in meta["fields"]},
-                              step=step)
+                              step=step, shardings=shardings)
     graph = None
     if "graph_indices" in tree:
         graph = NeighborGraph(jax.numpy.asarray(tree["graph_indices"]),

@@ -83,11 +83,13 @@ def test_streaming_backend_matches_dense_backend(matrix, measure):
         np.asarray(predict_dense(st_dense, spec)), rtol=1e-5, atol=1e-5)
 
 
-def test_pallas_backend_matches_dense_backend(matrix):
-    """Fused Pallas sims+top-k (interpret mode on CPU) serves cosine d2
-    directly: non-multiple-of-block shapes via padding, self-exclusion
-    in-kernel."""
-    spec = LandmarkSpec(n_landmarks=8, selection="popularity", d2="cosine",
+@pytest.mark.parametrize("measure", MEASURES)
+def test_pallas_backend_matches_dense_backend(matrix, measure):
+    """Fused Pallas sims+top-k (interpret mode on CPU) serves every d2
+    measure — cosine via pre-normalized rows, pearson/euclidean via the
+    in-kernel epilogues — with non-multiple-of-block shapes via padding and
+    self-exclusion in-kernel."""
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity", d2=measure,
                         k_neighbors=5)
     key = jax.random.PRNGKey(0)
     st_dense = fit(key, matrix, spec, backend="dense")
@@ -99,9 +101,24 @@ def test_pallas_backend_matches_dense_backend(matrix):
         np.asarray(predict_dense(st_dense, spec)), rtol=1e-5, atol=1e-5)
 
 
-def test_pallas_backend_rejects_non_cosine(matrix):
-    with pytest.raises(ValueError, match="cosine"):
-        build_neighbor_graph(jnp.ones((8, 4)), "pearson", k=2, backend="pallas")
+@pytest.mark.parametrize("measure", ["pearson", "euclidean"])
+def test_pallas_fold_in_non_cosine(measure):
+    """The fold-in (skinny-query) kernel runs the same in-kernel epilogues,
+    so serve-path extends no longer fall back to streaming off-TPU either."""
+    u, b, p = 300, 12, 64
+    r = _ratings(u + b, p, seed=2)
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity", d2=measure,
+                        k_neighbors=5)
+    st = fit(jax.random.PRNGKey(0), RatingMatrix(r[:u], u, p), spec,
+             backend="dense")
+    fold_p = fold_in(st, r[u:], spec, backend="pallas")
+    fold_d = fold_in(st, r[u:], spec, backend="dense")
+    rng = np.random.default_rng(4)
+    users = jnp.asarray(rng.integers(0, r.shape[0], 300).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, r.shape[1], 300).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(predict(fold_p, users, items, spec)),
+        np.asarray(predict(fold_d, users, items, spec)), rtol=1e-5, atol=1e-5)
 
 
 def test_graph_k_clamped_to_n_rows():

@@ -121,6 +121,50 @@ def test_foldin_topk_kernel_matches_oracle(b, c, n, k):
     assert overlap > 0.999
 
 
+@pytest.mark.parametrize("measure", ["pearson", "euclidean"])
+@pytest.mark.parametrize("u,c,n,k", [(96, 384, 24, 7), (33, 200, 16, 5)])
+def test_topk_sim_kernel_non_cosine_epilogues(measure, u, c, n, k):
+    """In-kernel pearson/euclidean epilogues == dense_similarity + top-k.
+
+    Raw (unnormalized) representation rows go in; the kernel centers/norms
+    per tile (the full feature axis is tile-resident)."""
+    from repro.core.similarity import dense_similarity
+    from repro.kernels.knn_topk import topk_sim_kernel
+
+    rep = RNG.normal(size=(u, n)).astype(np.float32) * 3.0
+    cand = RNG.normal(size=(c, n)).astype(np.float32) * 3.0
+    vals, idx = topk_sim_kernel(jnp.asarray(rep), jnp.asarray(cand), k=k,
+                                block=(64, 128), measure=measure)
+    wv, wi = jax.lax.top_k(dense_similarity(jnp.asarray(rep),
+                                            jnp.asarray(cand), measure), k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(wv), 1), rtol=1e-5, atol=1e-5)
+    overlap = np.mean([
+        len(set(np.asarray(idx)[i]) & set(np.asarray(wi)[i])) / k
+        for i in range(u)])
+    assert overlap > 0.999
+
+
+@pytest.mark.parametrize("measure", ["pearson", "euclidean"])
+def test_foldin_topk_kernel_non_cosine_epilogues(measure):
+    from repro.core.similarity import dense_similarity
+    from repro.kernels.knn_topk import foldin_topk_kernel
+
+    b, c, n, k = 9, 300, 20, 6
+    rep = RNG.normal(size=(b, n)).astype(np.float32) * 2.0
+    cand = RNG.normal(size=(c, n)).astype(np.float32) * 2.0
+    vals, idx = foldin_topk_kernel(jnp.asarray(rep), jnp.asarray(cand), k=k,
+                                   block_c=128, measure=measure)
+    wv, wi = jax.lax.top_k(dense_similarity(jnp.asarray(rep),
+                                            jnp.asarray(cand), measure), k)
+    np.testing.assert_allclose(np.sort(np.asarray(vals), 1),
+                               np.sort(np.asarray(wv), 1), rtol=1e-5, atol=1e-5)
+    overlap = np.mean([
+        len(set(np.asarray(idx)[i]) & set(np.asarray(wi)[i])) / k
+        for i in range(b)])
+    assert overlap > 0.999
+
+
 def test_foldin_topk_kernel_excludes_self_rows():
     """Fold-in batches are part of the candidate set (new-vs-new sims count)
     but query i must never select candidate self_offset + i — its own slot."""

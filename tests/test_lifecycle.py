@@ -151,6 +151,74 @@ def test_bucketed_predictions_ignore_poisoned_padding(fitted):
     assert (np.asarray(gi) < p).all()  # items, never user slots
 
 
+def test_fold_in_bucketed_donates_state_buffers(fitted):
+    """Serve-path donation: the capacity-stable BucketedState buffers are
+    declared as donated (input/output aliased) in the lowered module, so the
+    update stops paying a second copy of the state in HBM traffic — and the
+    donation must not cost extra executables per bucket (asserted separately
+    in test_fold_in_bucketed_compiles_once_per_bucket)."""
+    st, _ = fitted
+    p = st.ratings.shape[1]
+    bst = buckets.from_state(st, min_bucket=256, growth=2.0)
+    lowered = buckets.fold_in_bucketed.lower(
+        bst, jnp.zeros((16, p)), jnp.int32(4), SPEC)
+    txt = lowered.as_text()
+    assert "tf.aliasing_output" in txt or "jax.buffer_donor" in txt, (
+        "fold_in_bucketed must declare donated (aliased) state buffers")
+    # and the donated step still computes the same thing as a fresh state
+    padded = np.zeros((16, p), np.float32)
+    padded[:4] = np.asarray(_ratings(4, p, seed=11))
+    out = buckets.fold_in_bucketed(bst, jnp.asarray(padded), jnp.int32(4), SPEC)
+    ref = buckets.fold_in_bucketed(
+        buckets.from_state(st, min_bucket=256, growth=2.0),
+        jnp.asarray(padded), jnp.int32(4), SPEC)
+    np.testing.assert_array_equal(np.asarray(out.state.graph.weights),
+                                  np.asarray(ref.state.graph.weights))
+    assert int(out.n_valid) == int(ref.n_valid)
+
+
+# -------------------------------------------------------- serving compaction
+
+
+def test_should_compact_gates_on_capacity():
+    spec = policy.RefreshSpec(compact_serving=True)
+    assert policy.should_compact(spec, 1024)
+    assert policy.should_compact(spec, 65535)
+    assert not policy.should_compact(spec, 65536)  # uint16 id ceiling
+    assert not policy.should_compact(policy.RefreshSpec(), 1024)  # off by default
+
+
+def test_compact_state_serves_and_widens_on_growth(fitted):
+    """Lifecycle-driven compaction: after a swap the serving graph can go
+    uint16/bf16 (half the resident bytes); capacity growth widens it back."""
+    st, _ = fitted
+    bst = buckets.from_state(st, min_bucket=128, growth=2.0)
+    cst = buckets.compact_state(bst)
+    g, gc = bst.state.graph, cst.state.graph
+    assert gc.is_compact
+    assert (gc.indices.nbytes + gc.weights.nbytes) * 2 == \
+        g.indices.nbytes + g.weights.nbytes
+    rng = np.random.default_rng(3)
+    users = jnp.asarray(rng.integers(0, 120, 64).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, 48, 64).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(buckets.predict_pairs(cst, users, items)),
+        np.asarray(buckets.predict_pairs(bst, users, items)),
+        rtol=2e-2, atol=2e-2)  # bf16 weight tolerance
+    # widen on growth: the capacity bump re-pads through to_full
+    grown, grew = buckets.ensure_capacity(cst, 64, min_bucket=128, growth=2.0)
+    assert grew and not grown.state.graph.is_compact
+    # fold-in also widens (extend_neighbor_graph_bucketed goes through to_full)
+    p = st.ratings.shape[1]
+    padded = np.zeros((8, p), np.float32)
+    padded[:3] = np.asarray(_ratings(3, p, seed=4))
+    folded = buckets.fold_in_bucketed(grown, jnp.asarray(padded),
+                                      jnp.int32(3), SPEC)
+    assert not folded.state.graph.is_compact
+    # compact_state refuses nothing silently: no-op on an already-compact state
+    assert buckets.compact_state(cst) is cst
+
+
 # ------------------------------------------------------------------- monitor
 
 
