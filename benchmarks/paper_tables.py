@@ -396,6 +396,85 @@ def sharded_foldin_vs_single_bench(u0=2048, n_items=256, batch=64, n_lm=16,
     return rows
 
 
+def ivf_vs_streaming_bench(u=8192, n_items=512, batch=64, n_lm=32,
+                           n_clusters=96, nprobe=8, n_groups=16,
+                           iters=30) -> List[Dict]:
+    """Beyond-paper: IVF candidate generation vs the streaming scan on the
+    serve fold-in — the new-vs-all half of ``extend_neighbor_graph``, which
+    scans all U rows of the landmark embedding per batch on the streaming
+    backend and only the ``nprobe`` probed cells on the IVF backend
+    (``repro.retrieval``, docs/retrieval.md).
+
+    Data is the drifting lifecycle stream with ``n_groups`` preference
+    clusters (clustered populations are what IVF is for; uniform-random
+    ratings have no cell structure and understate recall — the group count
+    scales with U, 16 taste groups at 8k users). Both paths are warm-jitted
+    and timed *interleaved* (one call of each per loop iteration, medians
+    compared) so machine-load drift hits both sides equally — the ratio is
+    the stable quantity, the absolute times are not. recall@k of the IVF
+    candidates vs the exact streaming top-k rides in the ivf row, as does
+    the (untimed) index build.
+    """
+    from repro.core import RatingMatrix
+    from repro.core.graph import _streaming_query_topk
+    from repro.core.landmark_cf import fit
+    from repro.core.similarity import masked_similarity
+    from repro.data.synthetic import drifting_ratings
+    from repro import retrieval as rt
+
+    gen = dict(n_waves=4, drift=1.0, n_groups=n_groups)
+    waves = [drifting_ratings(0, w, u // 4, n_items, **gen) for w in range(4)]
+    r = jnp.asarray(np.concatenate(waves))
+    newr = jnp.asarray(drifting_ratings(1, 3, batch, n_items, **gen))
+    spec = LandmarkSpec(n_landmarks=n_lm, selection="popularity")
+    st = fit(jax.random.PRNGKey(0), RatingMatrix(r, u, n_items), spec)
+    new_rep = masked_similarity(newr, r[st.landmark_idx], spec.d1)
+    cand = jnp.concatenate([st.representation, new_rep])
+    k = st.graph.k
+
+    stream = jax.jit(lambda q, c: _streaming_query_topk(
+        q, c, spec.d2, k, 4096, self_offset=u))
+    vs, is_ = stream(new_rep, cand)
+
+    cfg = rt.resolve_ivf(rt.IVFSpec(n_clusters=n_clusters, nprobe=nprobe,
+                                    slack=1.0), u)
+    t0 = time.perf_counter()
+    index = rt.build_index(st.representation, cfg, spec.d2)
+    jax.block_until_ready(index.lists)
+    t_build = time.perf_counter() - t0
+    # slack=1.0 packs the index exactly full — reserve room for the batch
+    # (as extend_neighbor_graph does) or append would silently drop it and
+    # the row would measure a corrupted index
+    need = -(-(u + batch) // cfg.n_clusters)  # ceil rows-per-list
+    index = rt.grow_capacity(index, -(-need // 8) * 8)
+    index = rt.append(index, new_rep, u + jnp.arange(batch), spec.d2)
+    assert int(np.asarray(index.fill).sum()) == u + batch, "batch was dropped"
+    self_ids = u + jnp.arange(batch)
+    ivf = lambda: rt.search(index, new_rep, k, cfg.nprobe, spec.d2,
+                            self_ids=self_ids)
+    jax.block_until_ready(stream(new_rep, cand))  # warm both executables
+    jax.block_until_ready(ivf())
+    ts_stream, ts_ivf = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(stream(new_rep, cand))
+        t1 = time.perf_counter()
+        jax.block_until_ready(ivf())
+        t2 = time.perf_counter()
+        ts_stream.append(t1 - t0)
+        ts_ivf.append(t2 - t1)
+    t_stream = float(np.median(ts_stream))
+    t_ivf = float(np.median(ts_ivf))
+    va, ia = ivf()
+    recall = float(rt.recall_at_k(ia, is_, va, vs))
+    return [
+        {"variant": "streaming", "search_s": t_stream, "recall": 1.0},
+        {"variant": "ivf", "search_s": t_ivf, "recall": recall,
+         "build_s": t_build, "n_clusters": cfg.n_clusters,
+         "nprobe": cfg.nprobe, "capacity": index.capacity},
+    ]
+
+
 def kernel_fusion_bench(a=2048, p=4096, n=128, iters=3) -> List[Dict]:
     """Beyond-paper: fused-kernel schedule vs XLA multi-GEMM (wall time, CPU;
     the HBM-traffic model is the TPU story — see EXPERIMENTS.md §Perf)."""

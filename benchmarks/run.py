@@ -3,23 +3,154 @@
 Prints ``name,us_per_call,derived`` CSV rows. ``--full`` widens the sweeps to
 the 1M-rating datasets (slower); default keeps a CPU-friendly budget.
 Roofline rows are appended when the dry-run JSON artifacts exist (exp/).
+
+Every family runs behind a guard: a row whose optional deps or backends are
+unavailable (multi-device runtime, hypothesis, roofline artifacts, a backend
+that only exists on TPU, ...) emits a ``<name>[skipped]`` row with the reason
+instead of aborting the whole run — partial runs still produce the complete
+CSV, and ``--json PATH`` still writes a valid JSON row dump.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 from pathlib import Path
+from typing import List
 
 from . import paper_tables
+
+ROWS: List[dict] = []
 
 
 def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": us, "derived": derived})
 
 
-def _emit_sharded_foldin():
+def _guard(label: str, fn) -> None:
+    """Run one bench family; emit a [skipped] row instead of crashing when
+    its optional deps/backends are missing on this host."""
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001 — any family failure is a skip
+        _emit(f"{label}[skipped]", 0.0, f"{type(e).__name__}: {e}")
+
+
+def _bench_fig2(datasets, full):
+    for ds in datasets[:1] if not full else datasets:
+        t0 = time.perf_counter()
+        rows = paper_tables.fig2_mae_vs_landmarks(ds, folds=1 if not full else 2)
+        dt = (time.perf_counter() - t0) * 1e6
+        best = min(r["mae"] for r in rows if r["strategy"] != "BASELINE_CF")
+        base = [r["mae"] for r in rows if r["strategy"] == "BASELINE_CF"][0]
+        _emit(f"fig2_mae_vs_landmarks[{ds}]", dt,
+              f"best_landmark_mae={best:.4f};baseline_cf_mae={base:.4f};"
+              f"landmark_beats_baseline={best < base}")
+
+
+def _bench_tab2():
+    t0 = time.perf_counter()
+    rows = paper_tables.tab2_sim_combos("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    spread = max(r["mae"] for r in rows) - min(r["mae"] for r in rows)
+    _emit("tab2_sim_combos[movielens100k]", dt,
+          f"mae_spread={spread:.4f};insignificant(paper:~1e-2)={spread < 0.05}")
+
+
+def _bench_tab6():
+    t0 = time.perf_counter()
+    rows = paper_tables.tab6_runtime_vs_landmarks("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    import numpy as np
+
+    rnd = [r for r in rows if r["strategy"] == "random"]
+    ns = np.array([r["n"] for r in rnd], float)
+    ts = np.array([r["fit_s"] for r in rnd])
+    slope = float(np.polyfit(ns, ts, 1)[0])
+    core = [r for r in rows if r["strategy"] == "coresets"]
+    _emit("tab6_runtime_vs_landmarks[movielens100k]", dt,
+          f"fit_seconds_per_landmark={slope:.2e};"
+          f"coresets_slower_than_random={core[-1]['fit_s'] > rnd[-1]['fit_s']}")
+
+
+def _bench_tab10():
+    t0 = time.perf_counter()
+    rows = paper_tables.tab10_baseline_runtime("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    _emit("tab10_baseline_runtime[movielens100k]", dt,
+          ";".join(f"{r['mode']}={r['total_s']:.2f}s" for r in rows))
+
+
+def _bench_tab15():
+    t0 = time.perf_counter()
+    rows = paper_tables.tab15_comparative("movielens100k")
+    dt = (time.perf_counter() - t0) * 1e6
+    rel = {r["algo"]: r["rel"] for r in rows}
+    _emit("tab15_comparative[movielens100k]", dt,
+          ";".join(f"{k}={v:.1f}x" for k, v in rel.items()))
+
+
+def _bench_kernel_fusion():
+    for r in paper_tables.kernel_fusion_bench():
+        _emit(f"kernel_fusion[{r['variant']}]", r["us_per_call"], "")
+
+
+def _bench_graph_vs_dense():
+    rows = paper_tables.graph_vs_dense_fit_bench()
+    by = {r["variant"]: r for r in rows}
+    d, g = by["dense_d2"], by["graph"]
+    mem_ratio = d["artifact_bytes"] / max(g["artifact_bytes"], 1)
+    peak = ""
+    if d["peak_bytes"] and g["peak_bytes"]:
+        peak = f";peak_ratio={d['peak_bytes'] / max(g['peak_bytes'], 1):.1f}x"
+    _emit("graph_vs_dense_fit[u=8192]", g["fit_s"] * 1e6,
+          f"dense_fit_s={d['fit_s']:.3f};graph_fit_s={g['fit_s']:.3f};"
+          f"dense_artifact_mb={d['artifact_bytes'] / 2**20:.1f};"
+          f"graph_artifact_mb={g['artifact_bytes'] / 2**20:.1f};"
+          f"artifact_ratio={mem_ratio:.0f}x{peak}")
+
+
+def _bench_foldin_vs_refit():
+    rows = paper_tables.foldin_vs_refit_bench()
+    by = {r["variant"]: r for r in rows}
+    fi, rf = by["fold_in"], by["refit"]
+    _emit("foldin_vs_refit[u=8192,b=64]", fi["update_s"] * 1e6,
+          f"foldin_s={fi['update_s']:.4f};refit_s={rf['update_s']:.4f};"
+          f"speedup={rf['update_s'] / max(fi['update_s'], 1e-9):.1f}x")
+
+
+def _bench_refresh_vs_refit():
+    rows = paper_tables.refresh_vs_refit_bench()
+    by = {r["variant"]: r for r in rows}
+    bg, sy = by["background"], by["sync"]
+    _emit("refresh_vs_refit[u=1024,waves=6]", bg["wall_s"] * 1e6,
+          f"bg_worst_ms={bg['worst_request_s'] * 1e3:.1f};"
+          f"sync_worst_ms={sy['worst_request_s'] * 1e3:.1f};"
+          f"stall_ratio={sy['worst_request_s'] / max(bg['worst_request_s'], 1e-9):.0f}x;"
+          f"bg_wall_s={bg['wall_s']:.2f};sync_wall_s={sy['wall_s']:.2f};"
+          f"buckets={bg['buckets']};"
+          f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
+
+
+def _bench_ivf_vs_streaming():
+    """`ivf_vs_streaming`: fold-in candidate generation through the IVF
+    index (repro.retrieval) vs the streaming all-rows scan, on the drifting
+    stream — the sublinear-retrieval acceptance row (docs/retrieval.md:
+    >= 3x at recall@k >= 0.95 on this config)."""
+    rows = paper_tables.ivf_vs_streaming_bench()
+    by = {r["variant"]: r for r in rows}
+    sr, iv = by["streaming"], by["ivf"]
+    _emit(f"ivf_vs_streaming[u=8192,b=64,C={iv['n_clusters']}]",
+          iv["search_s"] * 1e6,
+          f"streaming_ms={sr['search_s'] * 1e3:.2f};"
+          f"ivf_ms={iv['search_s'] * 1e3:.2f};"
+          f"speedup={sr['search_s'] / max(iv['search_s'], 1e-9):.1f}x;"
+          f"recall_at_k={iv['recall']:.3f};nprobe={iv['nprobe']}"
+          f"/{iv['n_clusters']};build_s={iv['build_s']:.2f}")
+
+
+def _bench_sharded_foldin():
     """`sharded_foldin_vs_single`: mesh fold-in vs single-device fold-in.
 
     Needs a multi-device runtime — CI runs this with
@@ -40,114 +171,7 @@ def _emit_sharded_foldin():
           f"per_shard_cap={sh['capacity'] // sh['devices']}")
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--sharded-only", action="store_true",
-                    help="emit only the sharded_foldin_vs_single row (CI "
-                    "runs this under a forced 8-device host platform)")
-    args = ap.parse_args(argv)
-
-    print("name,us_per_call,derived")
-    if args.sharded_only:
-        _emit_sharded_foldin()
-        return
-
-    datasets = ["movielens100k", "netflix100k"]
-    if args.full:
-        datasets += ["movielens1m", "netflix1m"]
-
-    # Fig. 2/3 — MAE vs #landmarks per strategy (+ CF baseline line)
-    for ds in datasets[:1] if not args.full else datasets:
-        t0 = time.perf_counter()
-        rows = paper_tables.fig2_mae_vs_landmarks(ds, folds=1 if not args.full else 2)
-        dt = (time.perf_counter() - t0) * 1e6
-        best = min(r["mae"] for r in rows if r["strategy"] != "BASELINE_CF")
-        base = [r["mae"] for r in rows if r["strategy"] == "BASELINE_CF"][0]
-        _emit(f"fig2_mae_vs_landmarks[{ds}]", dt,
-              f"best_landmark_mae={best:.4f};baseline_cf_mae={base:.4f};"
-              f"landmark_beats_baseline={best < base}")
-
-    # Tables 2-5 — (d1, d2) measure combos
-    t0 = time.perf_counter()
-    rows = paper_tables.tab2_sim_combos("movielens100k")
-    dt = (time.perf_counter() - t0) * 1e6
-    spread = max(r["mae"] for r in rows) - min(r["mae"] for r in rows)
-    _emit("tab2_sim_combos[movielens100k]", dt,
-          f"mae_spread={spread:.4f};insignificant(paper:~1e-2)={spread < 0.05}")
-
-    # Tables 6-9 — runtime vs #landmarks per strategy
-    t0 = time.perf_counter()
-    rows = paper_tables.tab6_runtime_vs_landmarks("movielens100k")
-    dt = (time.perf_counter() - t0) * 1e6
-    import numpy as np
-
-    rnd = [r for r in rows if r["strategy"] == "random"]
-    ns = np.array([r["n"] for r in rnd], float)
-    ts = np.array([r["fit_s"] for r in rnd])
-    slope = float(np.polyfit(ns, ts, 1)[0])
-    core = [r for r in rows if r["strategy"] == "coresets"]
-    _emit("tab6_runtime_vs_landmarks[movielens100k]", dt,
-          f"fit_seconds_per_landmark={slope:.2e};"
-          f"coresets_slower_than_random={core[-1]['fit_s'] > rnd[-1]['fit_s']}")
-
-    # Table 10 — baseline full-matrix kNN runtime
-    t0 = time.perf_counter()
-    rows = paper_tables.tab10_baseline_runtime("movielens100k")
-    dt = (time.perf_counter() - t0) * 1e6
-    _emit("tab10_baseline_runtime[movielens100k]", dt,
-          ";".join(f"{r['mode']}={r['total_s']:.2f}s" for r in rows))
-
-    # Table 15 — comparative (memory- + model-based)
-    t0 = time.perf_counter()
-    rows = paper_tables.tab15_comparative("movielens100k")
-    dt = (time.perf_counter() - t0) * 1e6
-    rel = {r["algo"]: r["rel"] for r in rows}
-    _emit("tab15_comparative[movielens100k]", dt,
-          ";".join(f"{k}={v:.1f}x" for k, v in rel.items()))
-
-    # Beyond-paper: fused-schedule kernel bench
-    for r in paper_tables.kernel_fusion_bench():
-        _emit(f"kernel_fusion[{r['variant']}]", r["us_per_call"], "")
-
-    # Beyond-paper: O(U²) dense-d2 fit vs O(U·k) NeighborGraph fit
-    rows = paper_tables.graph_vs_dense_fit_bench()
-    by = {r["variant"]: r for r in rows}
-    d, g = by["dense_d2"], by["graph"]
-    mem_ratio = d["artifact_bytes"] / max(g["artifact_bytes"], 1)
-    peak = ""
-    if d["peak_bytes"] and g["peak_bytes"]:
-        peak = f";peak_ratio={d['peak_bytes'] / max(g['peak_bytes'], 1):.1f}x"
-    _emit("graph_vs_dense_fit[u=8192]", g["fit_s"] * 1e6,
-          f"dense_fit_s={d['fit_s']:.3f};graph_fit_s={g['fit_s']:.3f};"
-          f"dense_artifact_mb={d['artifact_bytes'] / 2**20:.1f};"
-          f"graph_artifact_mb={g['artifact_bytes'] / 2**20:.1f};"
-          f"artifact_ratio={mem_ratio:.0f}x{peak}")
-
-    # Beyond-paper: serve-path fold-in of a 64-user batch vs full refit
-    rows = paper_tables.foldin_vs_refit_bench()
-    by = {r["variant"]: r for r in rows}
-    fi, rf = by["fold_in"], by["refit"]
-    _emit("foldin_vs_refit[u=8192,b=64]", fi["update_s"] * 1e6,
-          f"foldin_s={fi['update_s']:.4f};refit_s={rf['update_s']:.4f};"
-          f"speedup={rf['update_s'] / max(fi['update_s'], 1e-9):.1f}x")
-
-    # Beyond-paper: background landmark refresh vs synchronous refit-on-drift
-    rows = paper_tables.refresh_vs_refit_bench()
-    by = {r["variant"]: r for r in rows}
-    bg, sy = by["background"], by["sync"]
-    _emit("refresh_vs_refit[u=1024,waves=6]", bg["wall_s"] * 1e6,
-          f"bg_worst_ms={bg['worst_request_s'] * 1e3:.1f};"
-          f"sync_worst_ms={sy['worst_request_s'] * 1e3:.1f};"
-          f"stall_ratio={sy['worst_request_s'] / max(bg['worst_request_s'], 1e-9):.0f}x;"
-          f"bg_wall_s={bg['wall_s']:.2f};sync_wall_s={sy['wall_s']:.2f};"
-          f"buckets={bg['buckets']};"
-          f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
-
-    # Beyond-paper: mesh-sharded fold-in vs single-device (skips on 1 device)
-    _emit_sharded_foldin()
-
-    # Roofline rows from the dry-run artifacts, if present
+def _bench_roofline():
     for tag in ("singlepod", "multipod"):
         path = Path(f"exp/dryrun_{tag}.json")
         if path.exists():
@@ -157,10 +181,68 @@ def main(argv=None) -> None:
                 rf = row["roofline_fraction"]
                 _emit(
                     f"roofline[{tag}:{row['arch']}/{row['shape']}/{row['variant']}]",
-                    max(row["t_compute_s"], row["t_memory_s"], row["t_collective_s"]) * 1e6,
-                    f"dominant={row['dominant']};roofline_frac={rf:.3f}" if rf else
-                    f"dominant={row['dominant']}",
+                    max(row["t_compute_s"], row["t_memory_s"],
+                        row["t_collective_s"]) * 1e6,
+                    f"dominant={row['dominant']};roofline_frac={rf:.3f}" if rf
+                    else f"dominant={row['dominant']}",
                 )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="emit only the sharded_foldin_vs_single row (CI "
+                    "runs this under a forced 8-device host platform)")
+    ap.add_argument("--ivf-only", action="store_true",
+                    help="emit only the ivf_vs_streaming row (the CI "
+                    "retrieval bench step)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as a JSON list; "
+                    "skipped rows are included, so partial runs stay valid")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if args.sharded_only:
+        # explicitly selected: crash on real failures so the dedicated CI
+        # step keeps its regression signal (the device-count skip is handled
+        # inside the family and still emits a [skipped] row)
+        _bench_sharded_foldin()
+    elif args.ivf_only:
+        _bench_ivf_vs_streaming()  # explicitly selected: no guard, see above
+    else:
+        datasets = ["movielens100k", "netflix100k"]
+        if args.full:
+            datasets += ["movielens1m", "netflix1m"]
+
+        # Fig. 2/3 — MAE vs #landmarks per strategy (+ CF baseline line)
+        _guard("fig2_mae_vs_landmarks",
+               lambda: _bench_fig2(datasets, args.full))
+        # Tables 2-5 — (d1, d2) measure combos
+        _guard("tab2_sim_combos", _bench_tab2)
+        # Tables 6-9 — runtime vs #landmarks per strategy
+        _guard("tab6_runtime_vs_landmarks", _bench_tab6)
+        # Table 10 — baseline full-matrix kNN runtime
+        _guard("tab10_baseline_runtime", _bench_tab10)
+        # Table 15 — comparative (memory- + model-based)
+        _guard("tab15_comparative", _bench_tab15)
+        # Beyond-paper: fused-schedule kernel bench
+        _guard("kernel_fusion", _bench_kernel_fusion)
+        # Beyond-paper: O(U²) dense-d2 fit vs O(U·k) NeighborGraph fit
+        _guard("graph_vs_dense_fit", _bench_graph_vs_dense)
+        # Beyond-paper: serve-path fold-in of a 64-user batch vs full refit
+        _guard("foldin_vs_refit", _bench_foldin_vs_refit)
+        # Beyond-paper: background refresh vs synchronous refit-on-drift
+        _guard("refresh_vs_refit", _bench_refresh_vs_refit)
+        # Beyond-paper: IVF candidate generation vs the streaming scan
+        _guard("ivf_vs_streaming", _bench_ivf_vs_streaming)
+        # Beyond-paper: mesh-sharded fold-in vs single-device
+        _guard("sharded_foldin_vs_single", _bench_sharded_foldin)
+        # Roofline rows from the dry-run artifacts, if present
+        _guard("roofline", _bench_roofline)
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(ROWS, indent=2) + "\n")
 
 
 if __name__ == "__main__":

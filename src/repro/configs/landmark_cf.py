@@ -24,4 +24,6 @@ SMOKE_REFRESH = RefreshSpec(
     min_holdout=16,
     reservoir=256,
     holdout_frac=0.25,
+    max_skew=1.5,  # drifted arrivals pile onto few IVF cells within a
+    rebalance_patience=1,  # wave or two — repack on the first breach
 )

@@ -18,11 +18,20 @@ pallas      O(U·k) HBM             TPU hot path, every d2 measure: the fused
                                    sims+top-k kernel with in-kernel
                                    pearson/euclidean epilogues — sims tiles
                                    never leave VMEM (kernels/knn_topk.py).
+ivf         O(U·(n+1)·slack)       sublinear candidate generation: a k-means
+                                   IVF index over the landmark embedding
+                                   (repro.retrieval) prunes each row's scan
+                                   to the nprobe nearest cells. Exact
+                                   (bit-identical to streaming) at
+                                   nprobe == n_clusters; approximate at the
+                                   default nprobe (docs/retrieval.md).
 ==========  =====================  ============================================
 
-``auto`` resolves to ``pallas`` on TPU (any d2 measure), else ``streaming``.
-All backends exclude self and store weight 0 for empty/invalid slots, so
-downstream Eq. (1) prediction (core.knn) is backend-agnostic.
+``auto`` resolves to ``pallas`` on TPU (any d2 measure), else ``streaming``
+(``ivf`` is opt-in: recall@k < 1 at the default nprobe is a policy decision,
+never an accident). All backends exclude self and store weight 0 for
+empty/invalid slots, so downstream Eq. (1) prediction (core.knn) is
+backend-agnostic.
 
 The serve path extends a fitted graph without refitting:
 :func:`extend_neighbor_graph` appends b new rows (new-vs-all candidate scan,
@@ -47,7 +56,7 @@ import jax.numpy as jnp
 from .similarity import EPS, dense_similarity, streaming_knn_graph
 from .types import NeighborGraph
 
-BACKENDS = ("dense", "streaming", "pallas", "auto")
+BACKENDS = ("dense", "streaming", "pallas", "ivf", "auto")
 
 
 def resolve_backend(backend: str, measure: str) -> str:
@@ -100,12 +109,16 @@ def build_neighbor_graph(
     chunk: int = 4096,
     block: Tuple[int, int] = (128, 512),
     interpret: Optional[bool] = None,
+    ivf=None,  # retrieval.IVFSpec for backend="ivf" (None -> defaults)
 ) -> NeighborGraph:
     """Top-k neighbor graph over ``rep`` rows under d2 ``measure``.
 
     Self is always excluded. ``k`` is clamped to U-1 (a row cannot have more
     distinct neighbors than other rows). See the module docstring for the
-    backend matrix.
+    backend matrix. ``backend="ivf"`` builds a fresh IVF index over ``rep``
+    and searches it at ``ivf.nprobe`` (exact when nprobe == n_clusters);
+    callers that want to keep the index for the serve path should build it
+    themselves via ``repro.retrieval`` and search directly.
     """
     u = rep.shape[0]
     k = max(1, min(k, u - 1)) if u > 1 else 1
@@ -118,6 +131,15 @@ def build_neighbor_graph(
     if backend == "streaming":
         vals, idx = streaming_knn_graph(rep, measure, k=k, chunk=chunk,
                                         exclude_self=True)
+        return finalize_topk(vals, idx)
+
+    if backend == "ivf":
+        from repro.retrieval import build_index, resolve_ivf, search
+
+        cfg = resolve_ivf(ivf, u)
+        index = build_index(rep, cfg, measure)
+        vals, idx = search(index, rep, k, cfg.nprobe, measure,
+                           self_ids=jnp.arange(u))
         return finalize_topk(vals, idx)
 
     # pallas: fused MXU sims + VMEM-resident top-k. Cosine pre-normalizes
@@ -177,6 +199,8 @@ def extend_neighbor_graph(
     *,
     chunk: int = 4096,
     interpret: Optional[bool] = None,
+    ivf=None,  # retrieval.IVFSpec for backend="ivf" (None -> defaults)
+    ivf_index=None,  # prebuilt retrieval.IVFIndex over the U existing rows
 ) -> NeighborGraph:
     """Append b rows to a fitted graph without refitting — the serve hot path.
 
@@ -184,7 +208,12 @@ def extend_neighbor_graph(
 
     1. **new-vs-all**: each new row scans all U+b candidates for its own top-k
        (streaming (b, chunk) tiles; the ``pallas`` backend runs the skinny
-       fold-in kernel with the whole query block VMEM-resident).
+       fold-in kernel with the whole query block VMEM-resident; the ``ivf``
+       backend appends the batch to an IVF index over the existing rows and
+       probes only the nprobe nearest cells — O(b·(U/C)·nprobe·n) candidate
+       generation instead of O(b·U·n), Lu & Shen's new-user case made
+       sublinear. Pass the serve loop's live ``ivf_index`` to skip the
+       O(U) on-the-fly build; exact at nprobe == n_clusters.)
     2. **back-patch**: the (U, b) existing-vs-new block is merged into the
        existing rows' best-lists, so an old user whose true top-k now contains
        a new user is updated too — extend followed by extend matches one
@@ -215,6 +244,38 @@ def extend_neighbor_graph(
                                        block_c=min(chunk, 512),
                                        interpret=interpret, self_offset=u,
                                        measure=measure)
+    elif backend == "ivf":
+        import dataclasses as _dc
+
+        from repro.retrieval import (IVFSpec, build_index, grow_capacity,
+                                     resolve_ivf, search)
+        from repro.retrieval import append as ivf_append
+
+        if ivf_index is None:
+            cfg = resolve_ivf(ivf, u)
+            ivf_index = build_index(rep, cfg, measure)
+        else:
+            cfg = resolve_ivf(_dc.replace(ivf or IVFSpec(),
+                                          n_clusters=ivf_index.n_clusters), u)
+        # the index covers the u existing rows; if the batch could exceed the
+        # total free slots, reserve room NOW (static shapes, so this works
+        # under the jitted fold_in — append cannot raise on overflow, it
+        # would silently drop rows and break exactness)
+        c_lists, cap = ivf_index.n_clusters, ivf_index.capacity
+        if u + b > c_lists * cap:
+            from repro.core.types import round_up as _round_up
+
+            ivf_index = grow_capacity(
+                ivf_index,
+                _round_up(max(-(-int((u + b) * cfg.slack) // c_lists),
+                              -(-(u + b) // c_lists)), 8))
+        # the batch rows are candidates for each other too: append first,
+        # search after — every candidate sits in exactly one posting list
+        with_batch = ivf_append(ivf_index, new_rep,
+                                u + jnp.arange(b, dtype=jnp.int32), measure,
+                                spill_choices=cfg.spill_choices)
+        vals, idx = search(with_batch, new_rep, k, cfg.nprobe, measure,
+                           self_ids=u + jnp.arange(b, dtype=jnp.int32))
     elif backend == "dense":
         # small-U parity path: one (b, U+b) block, still skinny (b ≪ U).
         cand = jnp.concatenate([rep, new_rep])

@@ -169,7 +169,8 @@ def fit(
     return LandmarkState(idx, rep, r, graph=graph)
 
 
-@partial(jax.jit, static_argnames=("spec", "sim_fn", "backend", "chunk"))
+@partial(jax.jit, static_argnames=("spec", "sim_fn", "backend", "chunk",
+                                   "ivf"))
 def fold_in(
     state: LandmarkState,
     new_ratings: jax.Array,  # (b, P) new rows of the *oriented* matrix
@@ -178,6 +179,8 @@ def fold_in(
     *,
     backend: Optional[str] = None,
     chunk: int = 4096,
+    ivf=None,  # retrieval.IVFSpec (static) for backend="ivf"
+    ivf_index=None,  # live retrieval.IVFIndex over the existing rows
 ) -> LandmarkState:
     """Project b new users into the fitted state without a refit — the serve
     path (Lu & Shen 1505.07900: the new-user similarity-list update).
@@ -188,6 +191,12 @@ def fold_in(
     exists. Landmarks, d1/d2 measures and k are frozen at fit time — matching
     a from-scratch ``fit`` on the concatenated matrix with the *same*
     landmarks to within top-k tie-breaking (oracle test in tests/test_graph).
+
+    ``backend="ivf"`` (or ``spec.graph_backend == "ivf"``) makes the
+    new-vs-all half sublinear through an IVF index over the landmark space;
+    pass the serve loop's ``ivf_index`` so the O(U) index build is not paid
+    per fold-in (docs/retrieval.md — note the returned state does NOT carry
+    the index; append the batch to the caller's index separately).
 
     ``new_ratings`` rows follow the state's orientation (new users in user
     mode, new items in item mode). The whole update jits: ``LandmarkState`` in,
@@ -202,7 +211,8 @@ def fold_in(
     new_rep = fn(new_ratings, landmarks, spec.d1)  # (b, n)
     graph = extend_neighbor_graph(
         state.graph, state.representation, new_rep, spec.d2,
-        backend=backend or spec.graph_backend, chunk=chunk)
+        backend=backend or spec.graph_backend, chunk=chunk,
+        ivf=ivf, ivf_index=ivf_index)
     return LandmarkState(
         state.landmark_idx,
         jnp.concatenate([state.representation, new_rep]),

@@ -61,6 +61,12 @@ def _tile_sims(rep, cand, measure):
     raise ValueError(f"unknown measure {measure!r}")
 
 
+# the d2 tile + epilogue is the shared building block of every in-kernel
+# similarity consumer; the IVF quantizer's assignment kernel
+# (repro.retrieval.kmeans) reuses it under this public name
+tile_sims = _tile_sims
+
+
 def _kernel(rep_ref, cand_ref, val_ref, idx_ref, best_v, best_i, *, k, n_c, bc,
             bu, n_valid, exclude_self, measure):
     @pl.when(pl.program_id(1) == 0)

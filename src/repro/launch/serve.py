@@ -14,6 +14,14 @@
   coverage), and policy-triggered background landmark refresh with an atomic
   generation-stamped artifact swap.
   ``python -m repro.launch.serve --workload cf --lifecycle --smoke``
+- ``cf --lifecycle --retrieval ivf``: same loop with the IVF retrieval
+  sidecar (docs/retrieval.md) — an inverted-file index over the landmark
+  embedding rides the artifact: fold-in appends arrivals under the frozen
+  quantizer, the background refresh rebuilds it inside the swap, a list-skew
+  hysteresis gate (``policy.should_rebalance``) repacks it proactively, and
+  every wave reports recall@k of the default-nprobe search vs the exact
+  path (asserted ≥ 0.95 under ``--smoke``).
+  ``python -m repro.launch.serve --workload cf --lifecycle --smoke --retrieval ivf``
 - ``cf --lifecycle --mesh pod=K,data=L``: the same loop sharded end-to-end
   (docs/distributed_serving.md) — ``fit_distributed`` base generation,
   ``ShardedLandmarkState`` serving with per-shard bucket capacities,
@@ -214,6 +222,9 @@ def _serve_cf(args):
 
 
 # -------------------------------------------------------------- cf lifecycle
+IVF_RECALL_SLO = 0.95  # serving recall target; nprobe escalates to hold it
+
+
 def _timed_requests(bst, rng, args):
     """One request wave against a BucketedState: warm (a cache hit except on
     bucket growth), then time per jitted call. Returns (pair_ts, topn_ts)."""
@@ -289,6 +300,33 @@ def _offer_holdout(mon, rng, key, start_id, hrows, hcols, hvals, res_batch):
                                  jnp.asarray(hr), jnp.int32(len(hrows)))
 
 
+def _ivf_probe_sample(index, bst, rng, spec, args):
+    """One wave's retrieval probe sample: fresh query rows + the exact
+    (nprobe == n_clusters) reference. The reference is nprobe-independent,
+    so the SLO escalation loop reuses it and re-searches only the cheap
+    approximate side — and every escalation step is judged on the SAME
+    sample (a resample per step could end the loop on a lucky draw)."""
+    from repro import retrieval as rt
+
+    u = int(bst.n_valid)
+    k = bst.state.graph.k
+    qids = jnp.asarray(rng.integers(0, u, min(args.batch, u)).astype(np.int32))
+    qrep = bst.state.representation[qids]
+    exact = rt.search(index, qrep, k, index.n_clusters, spec.d2,
+                      self_ids=qids)
+    return qids, qrep, k, exact
+
+
+def _ivf_probe_recall(index, probe, nprobe, measure):
+    """recall@k of the serving-nprobe search vs the wave's exact reference —
+    the serve-path analogue of the ivf_vs_streaming bench row."""
+    from repro import retrieval as rt
+
+    qids, qrep, k, (ve, ie) = probe
+    va, ia = rt.search(index, qrep, k, nprobe, measure, self_ids=qids)
+    return float(rt.recall_at_k(ia, ie, va, ve))
+
+
 def _serve_cf_lifecycle(args):
     """Replay a drifting stream through the fit→serve→monitor→refresh loop."""
     from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
@@ -346,8 +384,35 @@ def _serve_cf_lifecycle(args):
     caps_used = {(bst.capacity, False)}  # (capacity, serving-compact?)
     mon = monitor.init_monitor(rspec.reservoir, args.users, base_cov)
     pol = policy.PolicyState(generation=gen0)
+
+    # optional IVF retrieval sidecar: index over the landmark embedding,
+    # appended on fold-in, rebuilt by the background refresh and by the
+    # skew-gated proactive rebalance (docs/retrieval.md)
+    use_ivf = args.retrieval == "ivf"
+    index = retrieval = None
+    recalls = []
+    if use_ivf:
+        from repro import retrieval as rt
+
+        user_ivf = rt.IVFSpec(
+            n_clusters=args.clusters or None, nprobe=args.nprobe or None)
+
+        def resolve_serving_ivf(u):
+            cfg = rt.resolve_ivf(user_ivf, u)
+            if args.smoke and not args.nprobe:
+                # smoke scale asks for k=13 of ~256 rows — a twentieth of
+                # the population per query — so a quarter of the cells
+                # cannot hold recall >= 0.95; probe half instead
+                cfg = dataclasses.replace(
+                    cfg, nprobe=max(cfg.nprobe, cfg.n_clusters // 2))
+            return cfg
+
+        retrieval = resolve_serving_ivf(args.users)
+        index = rt.build_index(bst.state.representation, retrieval, spec.d2,
+                               n_valid=bst.n_valid)
     manager = RefreshManager(ckpt_dir, spec, compact=rspec.compact_serving,
-                             compact_max_rows=rspec.compact_max_rows)
+                             compact_max_rows=rspec.compact_max_rows,
+                             ivf=user_ivf if use_ivf else None)
     pending = None  # (generation, snapshot rows) of the refit in flight
     last_refit = None  # same, for the committed generation (oracle check)
     swap_wave = pre_post = None
@@ -355,6 +420,9 @@ def _serve_cf_lifecycle(args):
           f"k={st.graph.k} in {(time.perf_counter()-t0)*1e3:.0f}ms, bucket "
           f"{bst.capacity} (schedule: min={args.min_bucket} x{args.growth:g}) "
           f"-> {ckpt_dir}")
+    if use_ivf:
+        print(f"retrieval: ivf C={index.n_clusters} cap={index.capacity} "
+              f"nprobe={retrieval.nprobe} (exact at nprobe={index.n_clusters})")
 
     res_batch = rspec.reservoir  # fixed reservoir-offer shape: one executable
     keyseq = iter(jax.random.split(jax.random.PRNGKey(42), 2 * args.waves + 8))
@@ -376,6 +444,11 @@ def _serve_cf_lifecycle(args):
             mon = monitor.observe_fold_in(mon, rep_rows, jnp.int32(len(train)))
             mon = _offer_holdout(mon, rng, next(keyseq), start_id,
                                  hrows, hcols, hvals, res_batch)
+            if use_ivf:  # masked append under the frozen quantizer
+                index, _ = rt.ensure_index_capacity(index, len(train))
+                index = rt.append(index.to_full(), rep_rows,
+                                  start_id + jnp.arange(len(train)), spec.d2,
+                                  spill_choices=retrieval.spill_choices)
 
         # ---- drift detection + refresh decision ----------------------------
         snap = monitor.holdout_snapshot(mon, bst)
@@ -400,7 +473,10 @@ def _serve_cf_lifecycle(args):
             manager.join()  # drain so the replay always reports the swap
             done = manager.poll()
         if done is not None:
-            gen, st_new = done
+            if use_ivf:
+                gen, st_new, new_index = done  # index rebuilt inside the swap
+            else:
+                gen, st_new = done
             mae_pre = snap.mae  # nothing touched mon/bst since the snapshot
             snap_u = st_new.ratings.shape[0]
             cur_n = int(bst.n_valid)
@@ -410,6 +486,17 @@ def _serve_cf_lifecycle(args):
             bst = buckets.fold_in_rows(new_bst, delta, bq, spec,
                                        args.min_bucket, args.growth)
             caps_used.add((bst.capacity, bst.state.graph.is_compact))
+            if use_ivf and len(delta):  # swap the index + append the delta
+                new_index, _ = rt.ensure_index_capacity(new_index, len(delta))
+                new_index = rt.append(
+                    new_index, bst.state.representation[snap_u:cur_n],
+                    snap_u + jnp.arange(len(delta)), spec.d2,
+                    spill_choices=retrieval.spill_choices)
+            if use_ivf:
+                index = new_index
+                # refreshed landmarks restore cell structure: drop any SLO
+                # escalation back to the default probe budget
+                retrieval = resolve_serving_ivf(int(bst.n_valid))
             if policy.should_compact(rspec, bst.capacity):
                 # lifecycle-driven compaction: serve the uint16/bf16 graph
                 # until the next fold-in/growth widens it (docs/lifecycle.md)
@@ -417,6 +504,10 @@ def _serve_cf_lifecycle(args):
                 caps_used.add((bst.capacity, True))
                 art_kb = (bst.state.graph.indices.nbytes
                           + bst.state.graph.weights.nbytes) / 1024
+                if use_ivf:  # --compact-serving covers the index too
+                    index = index.to_compact()
+                    art_kb += (index.lists.nbytes + index.rows.nbytes
+                               + index.centroids.nbytes) / 1024
                 print(f"wave {wave}: serving graph compacted "
                       f"(uint16/bf16, {art_kb:.0f}KB resident)")
             new_cov = float(monitor.batch_coverage(
@@ -432,11 +523,45 @@ def _serve_cf_lifecycle(args):
                   f"delta, serving uninterrupted) holdout MAE "
                   f"{mae_pre:.4f} -> {mae_post:.4f}")
 
+        ivf_note = ""
+        if use_ivf:
+            # list-skew gate first — the same trigger plumbing as the mesh
+            # shard repack: drifted arrivals pile into cells the frozen
+            # quantizer does not cover, and the repack re-cells them before
+            # the next wave serves
+            skew = monitor.shard_skew(index.fill)
+            if policy.should_rebalance(pol, rspec, skew):
+                retrieval = resolve_serving_ivf(int(bst.n_valid))
+                index = rt.build_index(bst.state.representation, retrieval,
+                                       spec.d2, n_valid=bst.n_valid)
+                print(f"wave {wave}: ivf lists rebalanced (skew {skew:.2f} > "
+                      f"{rspec.max_skew:.2f}) -> C={index.n_clusters} "
+                      f"cap={index.capacity}")
+                skew = monitor.shard_skew(index.fill)
+            # then probe retrieval health of the config the next wave serves:
+            # recall@k of the serving-nprobe search vs the exact path, with
+            # an SLO feedback loop — drift degrades the frozen-landmark
+            # representation (neighbors diffuse across cells), so recall is
+            # held by *probing more cells* until the refresh swap restores
+            # the embedding and resets nprobe to the cheap default
+            probe = _ivf_probe_sample(index, bst, rng, spec, args)
+            rec = _ivf_probe_recall(index, probe, retrieval.nprobe, spec.d2)
+            while rec < IVF_RECALL_SLO and retrieval.nprobe < index.n_clusters:
+                esc = min(index.n_clusters, max(retrieval.nprobe + 1,
+                                                (retrieval.nprobe * 3) // 2))
+                retrieval = dataclasses.replace(retrieval, nprobe=esc)
+                rec = _ivf_probe_recall(index, probe, esc, spec.d2)
+                print(f"wave {wave}: ivf recall below SLO -> nprobe "
+                      f"escalated to {esc}/{index.n_clusters} "
+                      f"(recall {rec:.3f})")
+            recalls.append(rec)
+            ivf_note = (f" | ivf recall@{bst.state.graph.k}={rec:.3f} "
+                        f"nprobe={retrieval.nprobe} skew={skew:.2f}")
         print(f"wave {wave}: gen {pol.generation} U={int(bst.n_valid)}"
               f"/cap{bst.capacity} predict {args.requests}x{args.batch} pairs "
               f"p50={p50:.2f}ms p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
               f"p95={t95:.2f}ms | mae={snap.mae:.4f} cov={snap.coverage_ratio:.2f} "
-              f"fold={snap.foldin_frac:.2f}"
+              f"fold={snap.foldin_frac:.2f}" + ivf_note
               + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
 
     # ---- replay report: recompiles, swap latency, oracle-exactness ---------
@@ -476,6 +601,16 @@ def _serve_cf_lifecycle(args):
             raise AssertionError(
                 "smoke lifecycle replay must exercise a refresh; "
                 "tune --drift/--waves or the smoke RefreshSpec")
+    if use_ivf:
+        print(f"ivf retrieval: recall@k per wave "
+              f"{[f'{r:.3f}' for r in recalls]} (mean "
+              f"{np.mean(recalls):.3f}, SLO {IVF_RECALL_SLO}) ending at "
+              f"nprobe={retrieval.nprobe}/{index.n_clusters}")
+        if args.smoke:
+            assert np.mean(recalls) >= IVF_RECALL_SLO, (
+                f"ivf smoke recall {np.mean(recalls):.3f} < {IVF_RECALL_SLO} "
+                "on the drifting stream — the nprobe escalation + skew "
+                "rebuild + refresh loop failed to hold the SLO")
     print("cf lifecycle: done")
 
 
@@ -787,13 +922,18 @@ def _serve_cf_lifecycle_sharded(args):
                   f"{mae_pre:.4f} -> {mae_post:.4f}")
 
         fills = np.asarray(sst.n_valid)
+        # the proactive-rebalance gate rides the sharded snapshot's skew
+        # signal; least-loaded placement keeps it quiet in steady state, so
+        # a fire here marks the early-repack point (ROADMAP follow-up)
+        rebal = policy.should_rebalance(pol, rspec, snap.shard_skew)
         print(f"wave {wave}: gen {pol.generation} U={len(id_shard)} "
               f"shards[{fills.min()}..{fills.max()}]/cap{sst.capacity} "
               f"predict {args.requests}x{args.batch} pairs p50={p50:.2f}ms "
               f"p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
               f"p95={t95:.2f}ms | mae={snap.mae:.4f} "
-              f"cov={snap.coverage_ratio:.2f} fold={snap.foldin_frac:.2f} | "
-              f"bit-identical: {bool(same)}"
+              f"cov={snap.coverage_ratio:.2f} fold={snap.foldin_frac:.2f} "
+              f"skew={snap.shard_skew:.2f} | bit-identical: {bool(same)}"
+              + (" | shard skew breach: repack at next swap" if rebal else "")
               + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
 
     # ---- replay report -----------------------------------------------------
@@ -881,8 +1021,23 @@ def main(argv=None):
                     "listed axes). On CPU the host platform is forced to "
                     "that many devices, so CI can smoke a pod.")
     ap.add_argument("--graph-backend", default="auto",
-                    choices=("auto", "dense", "streaming", "pallas"))
+                    choices=("auto", "dense", "streaming", "pallas", "ivf"))
+    ap.add_argument("--retrieval", default="exact", choices=("exact", "ivf"),
+                    help="lifecycle: neighbor retrieval for the serve path. "
+                    "'ivf' keeps an IVF index over the landmark embedding "
+                    "(repro.retrieval): fold-in appends to it, refresh "
+                    "rebuilds it, the skew gate repacks it, and every wave "
+                    "reports recall@k vs the exact path (docs/retrieval.md)")
+    ap.add_argument("--nprobe", type=int, default=0,
+                    help="retrieval=ivf: probed cells per query "
+                    "(0 = n_clusters/4; == n_clusters is exact)")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="retrieval=ivf: k-means cells (0 = ~sqrt(U))")
     args = ap.parse_args(argv)
+    if args.retrieval == "ivf" and (not args.lifecycle or args.mesh):
+        raise SystemExit("--retrieval ivf runs on the single-device "
+                         "lifecycle replay (--workload cf --lifecycle, no "
+                         "--mesh); the sharded IVF path is a ROADMAP item")
     if args.mesh:
         # must precede first backend use: force a host-platform device count
         # big enough for the mesh (no-op when XLA_FLAGS already forces one)

@@ -45,8 +45,15 @@ from .monitor import (
     observe_fold_in,
     rebase,
     reservoir_add,
+    shard_skew,
 )
-from .policy import PolicyState, RefreshSpec, decide, should_compact
+from .policy import (
+    PolicyState,
+    RefreshSpec,
+    decide,
+    should_compact,
+    should_rebalance,
+)
 from .refresh import RefreshManager
 
 __all__ = [
@@ -77,6 +84,8 @@ __all__ = [
     "PolicyState",
     "RefreshSpec",
     "decide",
+    "shard_skew",
     "should_compact",
+    "should_rebalance",
     "RefreshManager",
 ]

@@ -14,6 +14,15 @@ Three signals, all cheap enough to update on the serve path:
   (few co-rated items) get poor representations before they get poor MAE —
   coverage is the leading indicator, MAE the lagging one.
 
+- **shard/list skew** — max/mean fill ratio over any bounded-capacity fill
+  vector: mesh shard fills (``ShardedLandmarkState.n_valid``) or IVF
+  posting-list fills (``retrieval.IVFIndex.fill``). Least-loaded placement
+  keeps shards balanced *between* events, but a refresh swap repacks
+  contiguously and arrival bursts pile onto one shard; a hot IVF cell
+  degrades recall the same way. ``policy.should_rebalance`` is the shared
+  hysteresis gate — shard repack and index rebuild ride the same plumbing
+  (ROADMAP "proactive rebalance").
+
 ``policy.decide`` turns a :class:`Snapshot` of these into a refresh decision.
 """
 from __future__ import annotations
@@ -23,6 +32,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import knn
 
@@ -66,6 +76,7 @@ class Snapshot:
     foldin_frac: float
     coverage: float
     coverage_ratio: float  # coverage / base_coverage
+    shard_skew: float = 1.0  # max/mean shard fill (sharded replay only)
 
 
 def init_monitor(reservoir_size: int, n_base: int,
@@ -79,6 +90,16 @@ def init_monitor(reservoir_size: int, n_base: int,
         coverage=jnp.float32(base_coverage),
         base_coverage=jnp.float32(base_coverage),
     )
+
+
+def shard_skew(fills) -> float:
+    """max/mean fill ratio of a bounded-capacity fill vector — 1.0 is
+    perfectly balanced. Works on mesh shard fills ((S,) ``n_valid``) and IVF
+    posting-list fills ((C,) ``IVFIndex.fill``) alike; an all-empty vector
+    reports 1.0 (nothing to balance)."""
+    f = np.asarray(fills, dtype=np.float64)
+    mean = f.mean() if f.size else 0.0
+    return float(f.max() / mean) if mean > 0 else 1.0
 
 
 @jax.jit
@@ -201,6 +222,7 @@ def holdout_snapshot_sharded(mon: MonitorState, sstate, id_map) -> Snapshot:
         mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),
         foldin_frac=float(frac), coverage=float(cov),
         coverage_ratio=float(cov) / max(base, 1e-9),
+        shard_skew=shard_skew(sstate.n_valid),
     )
 
 

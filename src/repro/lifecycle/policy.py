@@ -30,6 +30,8 @@ class RefreshSpec:
     compact_serving: bool = False  # after a refresh swap, serve the uint16/
     #                                bf16 compact graph (widened on growth)
     compact_max_rows: int = 65536  # uint16 id ceiling for compaction
+    max_skew: float = 2.0  # rebalance when max/mean fill exceeds this ...
+    rebalance_patience: int = 2  # ... for this many consecutive evaluations
 
 
 @dataclasses.dataclass
@@ -41,6 +43,7 @@ class PolicyState:
     cooldown: int = 0  # evaluations left before firing is allowed again
     generation: int = 0  # last committed artifact generation
     refreshing: bool = False  # a background refit is in flight
+    skew_streak: int = 0  # consecutive skew breaches (should_rebalance)
 
 
 def decide(pol: PolicyState, spec: RefreshSpec, snap: Snapshot
@@ -70,6 +73,27 @@ def decide(pol: PolicyState, spec: RefreshSpec, snap: Snapshot
     if pol.refreshing or pol.streak < spec.patience:
         return False, reasons
     return True, reasons
+
+
+def should_rebalance(pol: PolicyState, spec: RefreshSpec, skew: float) -> bool:
+    """Hysteresis gate on a fill-skew signal (``monitor.shard_skew``).
+
+    Shared trigger plumbing for the two skew consumers (ROADMAP "proactive
+    rebalance"): an early *shard repack* on the mesh serve path and an IVF
+    *index rebuild* on the retrieval path — both are the same event class, a
+    capacity layout that drifted away from the population. Same shape as
+    ``decide``: the breach must persist ``rebalance_patience`` consecutive
+    evaluations, and firing resets the streak (the repack/rebuild itself is
+    the cooldown — post-event skew starts near 1).
+    """
+    if skew > spec.max_skew:
+        pol.skew_streak += 1
+    else:
+        pol.skew_streak = 0
+    if pol.skew_streak >= spec.rebalance_patience:
+        pol.skew_streak = 0
+        return True
+    return False
 
 
 def should_compact(spec: RefreshSpec, n_rows: int) -> bool:

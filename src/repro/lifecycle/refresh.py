@@ -49,11 +49,21 @@ class RefreshManager:
     serving-side ``policy.should_compact`` gate (silently skipped once U
     outgrows the ceiling — the "widen on growth" half of lifecycle-driven
     compaction).
+
+    ``ivf`` (a ``retrieval.IVFSpec``) additionally rebuilds the IVF
+    retrieval index over the refitted representation *inside the background
+    swap* — the quantizer is frozen between refreshes exactly like the
+    landmarks, so refresh is the one place both move. ``poll`` then returns
+    ``(generation, state, index)`` 3-tuples; the rebuild is keyed
+    ``PRNGKey(ivf.seed)`` so a swap's index is reproducible from its
+    checkpoint. The index itself is derived data (rebuildable from the
+    artifact in one call), so it is not checkpointed.
     """
 
     def __init__(self, ckpt_dir: str, spec: LandmarkSpec, *,
                  compact: bool = False, compact_max_rows: int = 65536,
-                 keep: int = 3, mesh=None, row_axes=("pod", "data")):
+                 keep: int = 3, mesh=None, row_axes=("pod", "data"),
+                 ivf=None):
         self.ckpt_dir = ckpt_dir
         self.spec = spec
         self.compact = compact
@@ -61,9 +71,10 @@ class RefreshManager:
         self.keep = keep
         self.mesh = mesh
         self.row_axes = row_axes
+        self.ivf = ivf
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
-        self._result: Optional[Tuple[int, LandmarkState]] = None
+        self._result: Optional[Tuple] = None  # (gen, state[, ivf_index])
         self._error: Optional[BaseException] = None
         self._last_generation = -1
 
@@ -101,8 +112,21 @@ class RefreshManager:
                 compact = self.compact and r.shape[0] < self.compact_max_rows
                 save_landmark_state(self.ckpt_dir, st, compact=compact,
                                     step=generation, keep=self.keep)
+                if self.ivf is not None:
+                    # rebuild the retrieval index on the refreshed embedding:
+                    # centroids move with the landmarks, inside the same
+                    # background swap, so serving never probes a stale
+                    # quantizer against a new representation
+                    from repro.retrieval import build_index, resolve_ivf
+
+                    cfg = resolve_ivf(self.ivf, st.representation.shape[0])
+                    index = build_index(st.representation, cfg, self.spec.d2)
+                    jax.block_until_ready(index.lists)
+                    result = (generation, st, index)
+                else:
+                    result = (generation, st)
                 with self._lock:
-                    self._result = (generation, st)
+                    self._result = result
             except BaseException as e:  # surfaced on the next poll
                 with self._lock:
                     self._error = e
@@ -111,8 +135,10 @@ class RefreshManager:
         self._thread.start()
         return True
 
-    def poll(self) -> Optional[Tuple[int, LandmarkState]]:
-        """Non-blocking: the committed (generation, state), once per refit."""
+    def poll(self) -> Optional[Tuple]:
+        """Non-blocking: the committed (generation, state), once per refit —
+        (generation, state, ivf_index) when the manager was built with
+        ``ivf``."""
         with self._lock:
             if self._error is not None:
                 err, self._error = self._error, None

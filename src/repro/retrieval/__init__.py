@@ -1,0 +1,44 @@
+"""Landmark-space ANN retrieval: an IVF index for sublinear neighbor search.
+
+The paper shrinks each user's similarity representation to O(n) landmark
+coordinates; this package removes the last brute-force pass over them. A
+k-means coarse quantizer (``kmeans``) cells the (U, n) embedding, padded
+posting lists (``index``) hold each cell's member rows, and ``search`` probes
+only the ``nprobe`` nearest cells per query — O((U/C)·nprobe·n) instead of
+O(U·n), with an exact-by-construction fallback at ``nprobe == n_clusters``
+that is bit-identical to the streaming graph backend.
+
+Consumed by ``core.graph`` (``backend="ivf"``), the serve fold-in
+(``core.fold_in(..., ivf_index=...)``), the lifecycle refresh (index rebuilt
+inside the generation-stamped swap) and ``launch/serve.py --retrieval ivf``.
+See docs/retrieval.md.
+"""
+from .index import (
+    IVFIndex,
+    IVFSpec,
+    append,
+    build_index,
+    ensure_index_capacity,
+    grow_capacity,
+    recall_at_k,
+    resolve_ivf,
+    score_candidates_kernel,
+    search,
+)
+from .kmeans import assign_clusters, assign_clusters_kernel, kmeans
+
+__all__ = [
+    "IVFIndex",
+    "IVFSpec",
+    "append",
+    "assign_clusters",
+    "assign_clusters_kernel",
+    "build_index",
+    "ensure_index_capacity",
+    "grow_capacity",
+    "kmeans",
+    "recall_at_k",
+    "resolve_ivf",
+    "score_candidates_kernel",
+    "search",
+]

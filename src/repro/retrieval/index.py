@@ -1,0 +1,588 @@
+"""IVF (inverted-file) index over the landmark embedding — sublinear search.
+
+The landmark reduction shrinks each user's similarity *representation* from
+O(|P|) to O(n), but every neighbor search in the repo still scanned all U rows
+of that representation. This module removes the scan: a k-means coarse
+quantizer (``kmeans.py``) partitions the (U, n) rows into ``C`` cells, each
+cell keeps a fixed-capacity padded posting list of its member row ids, and
+``search`` scores only the rows in the ``nprobe`` cells nearest to each query
+— O((U/C)·nprobe·n) per query instead of O(U·n).
+
+Layout (mirrors the ``lifecycle.buckets`` discipline — every shape static,
+every fill traced, one executable per geometry):
+
+    centroids  (C, n)       f32   the coarse quantizer
+    lists      (C, cap)     i32   member row ids, padded; slot >= fill[c] inert
+    rows       (C, cap, n)  f32   member landmark vectors, same slots
+    fill       (C,)         i32   live entries per list
+
+Invariant: **every valid row id appears in exactly one posting list.** Build
+and append enforce it even under jit with a traced batch: a row whose home
+list is full is placed in its *next-nearest* cell with space (one placement
+round per preference rank), so a drift burst that overruns a hot cell
+degrades into nearby cells — recoverable by raising nprobe — instead of
+teleporting rows to arbitrary slots only findable at ``nprobe == C``.
+Overflow costs recall, never correctness: ``search(..., nprobe == C)`` stays
+exact regardless of skew, and the host-side :func:`ensure_index_capacity`
+regrows ``cap`` between appends (the one deliberate recompile, mirroring
+``buckets.ensure_capacity``) so overflow stays rare in steady state.
+
+Exactness contract: at ``nprobe == n_clusters`` the probe set covers every
+list, so ``search`` collapses to one shared candidate matrix scored with the
+*same* ``dense_similarity`` GEMM the streaming backend uses (the GEMM is
+bitwise invariant to candidate permutation / padding / chunk width — verified
+in tests), merged by the same (weight desc, id asc) canonical order every
+streaming scan in ``core.graph`` produces. The result is **bit-identical** to
+``backend="streaming"``. At ``nprobe < C`` the per-query candidate sets
+differ, scores come from an m-invariant multiply-reduce (or the skinny Pallas
+scorer on TPU), and recall@k vs the exact path is the quality metric —
+monotonically non-decreasing in ``nprobe`` (candidate sets are nested,
+property-tested in tests/test_properties.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.similarity import EPS, dense_similarity
+from repro.core.types import round_up
+
+from .kmeans import kmeans
+
+SCORERS = ("jnp", "pallas", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFSpec:
+    """Knobs of the IVF index (hashable — usable as a jit static arg).
+
+    ``n_clusters``/``nprobe`` default to None = derive from U at build time
+    (:func:`resolve_ivf`: C ≈ √U, nprobe ≈ C/4). ``slack`` sizes the posting
+    lists (cap = ⌈U·slack/C⌉, rounded to 8) so moderate cluster skew fits
+    without spilling; ``seed`` keys the k-means init so rebuilds are
+    deterministic per generation.
+    """
+
+    n_clusters: Optional[int] = None
+    nprobe: Optional[int] = None
+    iters: int = 8
+    slack: float = 1.25
+    spill_choices: int = 0  # overflow placement depth: try the T nearest
+    #                         cells in order (0 = all C — arbitrary-slot
+    #                         spill unreachable, the recall-safe default)
+    seed: int = 0
+    assign_backend: str = "auto"  # kmeans assignment: jnp|pallas|auto
+
+
+def resolve_ivf(spec: Optional[IVFSpec], u: int) -> IVFSpec:
+    """Concrete (n_clusters, nprobe, spill depth) for a U-row index.
+
+    Defaults: C ≈ √U cells, probe a quarter of them, place overflow down the
+    *full* cell-preference order (``spill_choices == C``) so a hot region
+    that overruns its cells degrades to nearby cells, never to arbitrary
+    free slots a query would only find at nprobe == C.
+    """
+    spec = spec or IVFSpec()
+    c = spec.n_clusters or int(round(math.sqrt(max(u, 1))))
+    c = max(1, min(c, max(u, 1)))
+    nprobe = min(max(spec.nprobe or max(1, c // 4), 1), c)
+    t = c if spec.spill_choices <= 0 else min(spec.spill_choices, c)
+    return dataclasses.replace(spec, n_clusters=c, nprobe=nprobe,
+                               spill_choices=t)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    """The servable index artifact — a pure pytree, jit/donation friendly.
+
+    ``rows`` carries each member's (n,) landmark vector *inside* its posting
+    list (classic inverted-file layout): probing a cell is then one
+    contiguous (cap, n) slice instead of ``cap`` scattered row gathers —
+    on CPU that gather was the dominant cost of the whole search. The
+    payloads are bit-copies of the rep rows written at build/append time, so
+    scores computed from them equal scores computed from ``rep``.
+    """
+
+    centroids: jax.Array  # (C, n) f32 coarse quantizer
+    lists: jax.Array  # (C, cap) int32 member row ids (uint16 when compact)
+    rows: jax.Array  # (C, cap, n) f32 member landmark vectors, same slots
+    fill: jax.Array  # (C,) int32 live entries per list
+
+    def tree_flatten(self):
+        return (self.centroids, self.lists, self.rows, self.fill), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        """Per-list slot capacity (the padded minor dimension)."""
+        return self.lists.shape[1]
+
+    @property
+    def is_compact(self) -> bool:
+        return self.lists.dtype != jnp.int32
+
+    def to_compact(self) -> "IVFIndex":
+        """uint16 posting lists — halves the id payload, same contract as
+        ``NeighborGraph.to_compact`` (ids must fit 16 bits; gathers accept
+        uint16 directly, ``search`` widens on the fly)."""
+        top = int(jnp.max(jnp.where(self.fill > 0,
+                                    jnp.max(self.lists, axis=1), 0)))
+        if top > 65535:
+            raise ValueError(
+                f"compact posting lists are uint16: max id {top} exceeds 65535")
+        return IVFIndex(self.centroids, self.lists.astype(jnp.uint16),
+                        self.rows, self.fill)
+
+    def to_full(self) -> "IVFIndex":
+        return IVFIndex(self.centroids, self.lists.astype(jnp.int32),
+                        self.rows, self.fill)
+
+
+# ------------------------------------------------------------- list packing
+def _scatter_entries(lists, rows, ids, payload, dest_c, dest_s, ok, c):
+    """Write (id, vector) pairs at (dest_c, dest_s); ``ok=False`` drops."""
+    cc = jnp.where(ok, dest_c, c)
+    ss = jnp.where(ok, dest_s, 0)
+    lists = lists.at[cc, ss].set(ids, mode="drop")
+    rows = rows.at[cc, ss].set(payload, mode="drop")
+    return lists, rows
+
+
+def _place_round(
+    lists: jax.Array,  # (C, cap) int32
+    rows: jax.Array,  # (C, cap, n) f32 member vectors
+    fill: jax.Array,  # (C,) int32
+    ids: jax.Array,  # (B,) int32 row ids, in arrival order
+    payload: jax.Array,  # (B, n) the rows' landmark vectors
+    clusters: jax.Array,  # (B,) int32 target list per id for this round
+    todo: jax.Array,  # (B,) bool rows still unplaced
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One placement round: rows land at ``fill[c] + rank`` of their target
+    list (rank = arrival order within the batch's same-list group, via one
+    stable sort); rows that would cross ``cap`` stay unplaced. Returns
+    ``(lists, rows, fill, placed)`` with ``placed`` in batch order."""
+    c, cap = lists.shape
+    b = ids.shape[0]
+    key = jnp.where(todo, clusters, c)  # settled rows sort to the end
+    order = jnp.argsort(key)  # stable: batch order within each list group
+    sc = key[order]
+    rank = jnp.arange(b) - jnp.searchsorted(sc, sc, side="left")
+    scl = jnp.clip(sc, 0, c - 1)
+    desired = fill[scl] + rank
+    fits = todo[order] & (sc < c) & (desired < cap)
+    lists, rows = _scatter_entries(lists, rows, ids[order], payload[order],
+                                   scl, desired, fits, c)
+    fill = fill + jax.ops.segment_sum(
+        fits.astype(jnp.int32), jnp.where(fits, scl, c),
+        num_segments=c + 1)[:-1]
+    placed = jnp.zeros((b,), bool).at[order].set(fits)
+    return lists, rows, fill, placed
+
+
+def _spill_free_slots(lists, rows, fill, ids, payload, todo):
+    """Last-resort placement: the m-th leftover row takes the m-th free slot
+    in (list-major, slot) order. Costs recall (the row sits in an unrelated
+    cell), never correctness — nothing valid is dropped while
+    ``sum(fill) + batch <= C*cap``, the invariant exactness rests on.
+    Beyond that bound there is nowhere left to write and leftover rows ARE
+    silently dropped (this runs under jit — it cannot raise): callers must
+    reserve room first, via :func:`ensure_index_capacity` (host) or
+    :func:`grow_capacity` (traced, static shapes)."""
+    c, cap = lists.shape
+    m_rank = jnp.cumsum(todo.astype(jnp.int32)) - 1
+    free = cap - fill  # (C,)
+    fstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(free).astype(jnp.int32)])
+    dest_c = jnp.clip(jnp.searchsorted(fstart, m_rank, side="right") - 1,
+                      0, c - 1)
+    dest_s = fill[dest_c] + (m_rank - fstart[dest_c])
+    ok = todo & (m_rank < fstart[-1])
+    lists, rows = _scatter_entries(lists, rows, ids, payload,
+                                   dest_c, dest_s, ok, c)
+    fill = fill + jax.ops.segment_sum(
+        ok.astype(jnp.int32), jnp.where(ok, dest_c, c),
+        num_segments=c + 1)[:-1]
+    return lists, rows, fill
+
+
+def _place(
+    lists: jax.Array,  # (C, cap) int32
+    rows: jax.Array,  # (C, cap, n) f32
+    fill: jax.Array,  # (C,) int32
+    ids: jax.Array,  # (B,) int32 row ids to insert, in arrival order
+    payload: jax.Array,  # (B, n) their landmark vectors
+    choices: jax.Array,  # (B, T) preferred lists per id, best first
+    valid: jax.Array,  # (B,) bool; invalid entries are dropped
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter a batch into the posting lists — all traced, nothing dropped.
+
+    Each row tries its T nearest cells in order (round r places everyone
+    still homeless into choice r), so overflow from a hot cell lands in the
+    row's *next*-nearest cell with space — a cell queries near that row
+    actually probe — and a burst that overruns several cells degrades
+    *gracefully* down the preference order instead of teleporting to an
+    arbitrary slot. With T == C (the ``resolve_ivf`` default) the free-slot
+    fallback is unreachable: every row sits in its best available cell,
+    which is what keeps recall recoverable by raising nprobe when drift
+    piles arrivals into a corner of the embedding. The round loop is a
+    ``fori_loop`` so deep preference orders cost trace size O(1).
+    """
+    placed = ~valid  # invalid rows: pretend placed (== dropped)
+
+    def round_(r, carry):
+        lists, rows, fill, placed = carry
+        lists, rows, fill, ok = _place_round(
+            lists, rows, fill, ids, payload,
+            jax.lax.dynamic_index_in_dim(choices, r, axis=1, keepdims=False),
+            ~placed)
+        return lists, rows, fill, placed | ok
+
+    lists, rows, fill, placed = jax.lax.fori_loop(
+        0, choices.shape[1], round_, (lists, rows, fill, placed))
+    return _spill_free_slots(lists, rows, fill, ids, payload, ~placed)
+
+
+def _list_choices(rep: jax.Array, centroids: jax.Array, measure: str,
+                  n_choices: int) -> jax.Array:
+    """(B, T) nearest-cell preference per row (T clamped to C)."""
+    sims = dense_similarity(rep.astype(jnp.float32), centroids, measure)
+    _, top = jax.lax.top_k(sims, min(n_choices, centroids.shape[0]))
+    return top.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "measure"))
+def build_index(
+    rep: jax.Array,  # (U, n) landmark-space rows (rows >= n_valid: padding)
+    spec: IVFSpec,  # resolved (concrete n_clusters) — see resolve_ivf
+    measure: str = "cosine",
+    n_valid: Optional[jax.Array] = None,  # () int32 traced fill mark
+    key: Optional[jax.Array] = None,
+) -> IVFIndex:
+    """k-means the rows, pack the posting lists — the full (re)build.
+
+    Jit-compiled end-to-end (traced ``n_valid`` welcome), so the lifecycle can
+    rebuild inside a background refresh exactly like the graph refit. Capacity
+    is static: ``cap = round_up(ceil(U * slack / C), 8)`` guarantees
+    ``C*cap >= U`` — every valid row gets a slot (spill-packed if its home
+    list runs over).
+    """
+    if spec.n_clusters is None:
+        raise ValueError("build_index needs a resolved IVFSpec "
+                         "(resolve_ivf(spec, u) fixes n_clusters/nprobe)")
+    u = rep.shape[0]
+    c = spec.n_clusters
+    cap = round_up(max(-(-int(u * spec.slack) // c), 1), 8)
+    if key is None:
+        key = jax.random.PRNGKey(spec.seed)
+    cent, _ = kmeans(key, rep, c, measure, iters=spec.iters,
+                     n_valid=n_valid, backend=spec.assign_backend)
+    valid = (jnp.arange(u) < n_valid) if n_valid is not None \
+        else jnp.ones((u,), bool)
+    choices = _list_choices(rep, cent, measure, spec.spill_choices)
+    lists = jnp.zeros((c, cap), jnp.int32)
+    rows = jnp.zeros((c, cap, rep.shape[1]), jnp.float32)
+    fill = jnp.zeros((c,), jnp.int32)
+    lists, rows, fill = _place(lists, rows, fill,
+                               jnp.arange(u, dtype=jnp.int32),
+                               rep.astype(jnp.float32), choices, valid)
+    return IVFIndex(cent, lists, rows, fill)
+
+
+@functools.partial(jax.jit, static_argnames=("measure", "spill_choices"))
+def append(
+    index: IVFIndex,
+    new_rep: jax.Array,  # (b, n) appended rows; rows >= b_valid are filler
+    new_ids: jax.Array,  # (b,) int32 row ids of the appended rows
+    measure: str = "cosine",
+    b_valid: Optional[jax.Array] = None,  # () int32 real rows in the batch
+    spill_choices: int = 0,  # 0 = full preference order (see IVFSpec)
+) -> IVFIndex:
+    """Masked fold-in append: route each new row to its nearest centroid.
+
+    The quantizer is frozen (centroids move only at rebuild — the landmark
+    discipline applied to the index), so this is one (b, C) assignment GEMM +
+    a masked scatter; ``b_valid`` is traced, one executable per batch shape.
+    Overflowing rows spill to their next-nearest cells — but an index with
+    fewer total free slots than the batch has nowhere to put the remainder
+    and silently drops it (jit cannot raise): reserve room first with
+    :func:`ensure_index_capacity` (host) or :func:`grow_capacity` (traced),
+    as every in-repo caller does.
+    """
+    if index.is_compact:
+        index = index.to_full()
+    b = new_rep.shape[0]
+    valid = (jnp.arange(b) < b_valid) if b_valid is not None \
+        else jnp.ones((b,), bool)
+    t = index.n_clusters if spill_choices <= 0 else spill_choices
+    choices = _list_choices(new_rep, index.centroids, measure, t)
+    lists, rows, fill = _place(index.lists, index.rows, index.fill,
+                               new_ids.astype(jnp.int32),
+                               new_rep.astype(jnp.float32), choices, valid)
+    return IVFIndex(index.centroids, lists, rows, fill)
+
+
+def grow_capacity(index: IVFIndex, new_cap: int) -> IVFIndex:
+    """Functional per-list capacity regrow — safe under jit (static shapes
+    only, fills untouched, padded slots inert). The traced-context
+    counterpart of :func:`ensure_index_capacity`: ``extend_neighbor_graph``
+    uses it to reserve room for a fold-in batch inside the jitted serve
+    update, where the host-side check cannot run."""
+    if new_cap <= index.capacity:
+        return index
+    pad = new_cap - index.capacity
+    return IVFIndex(index.centroids,
+                    jnp.pad(index.lists, ((0, 0), (0, pad))),
+                    jnp.pad(index.rows, ((0, 0), (0, pad), (0, 0))),
+                    index.fill)
+
+
+def ensure_index_capacity(index: IVFIndex, incoming: int,
+                          slack: float = 1.25) -> Tuple[IVFIndex, bool]:
+    """Host-side growth check before an append of ``incoming`` rows.
+
+    Regrows ``cap`` when the fullest list could overflow (worst case: the
+    whole batch lands in one cell), so appends stay spill-free in steady
+    state. Returns ``(index, grew)`` — the one deliberate recompile, exactly
+    like ``buckets.ensure_capacity``.
+    """
+    idx = index.to_full() if index.is_compact else index
+    top = int(np.asarray(idx.fill).max()) if idx.n_clusters else 0
+    if top + incoming <= idx.capacity:
+        return index, False
+    new_cap = round_up(max(int((top + incoming) * slack), top + incoming), 8)
+    lists = np.zeros((idx.n_clusters, new_cap), np.int32)
+    lists[:, :idx.capacity] = np.asarray(idx.lists)
+    rows = np.zeros((idx.n_clusters, new_cap, idx.rows.shape[2]), np.float32)
+    rows[:, :idx.capacity] = np.asarray(idx.rows)
+    return IVFIndex(idx.centroids, jnp.asarray(lists), jnp.asarray(rows),
+                    idx.fill), True
+
+
+# ------------------------------------------------------------------ search
+def _gathered_sims(q: jax.Array, cand: jax.Array, measure: str) -> jax.Array:
+    """d2 scores of each query against its own gathered candidate rows.
+
+    ``q`` (b, n) vs ``cand`` (b, m, n) → (b, m). Same algebra as
+    ``core.similarity.dense_similarity``, phrased as a broadcast
+    multiply-reduce so each (query, candidate) score depends only on the two
+    rows — bitwise invariant to m (how many other candidates share the batch),
+    which is what makes recall monotone in nprobe.
+    """
+    if measure == "pearson":
+        q = q - q.mean(axis=-1, keepdims=True)
+        cand = cand - cand.mean(axis=-1, keepdims=True)
+    z = jnp.sum(q[:, None, :] * cand, axis=-1)  # (b, m)
+    if measure in ("cosine", "pearson"):
+        nu = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+        nv = jnp.sqrt(jnp.sum(cand * cand, axis=-1))
+        return z / jnp.maximum(nu * nv, EPS)
+    if measure == "euclidean":
+        nu = jnp.sum(q * q, axis=-1, keepdims=True)
+        nv = jnp.sum(cand * cand, axis=-1)
+        d2 = jnp.maximum(nu - 2.0 * z + nv, 0.0)
+        return 1.0 / (1.0 + jnp.sqrt(d2))
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+def _score_kernel(q_ref, cand_ref, out_ref, *, measure):
+    """Skinny gather+score tile: (bb, n) queries × their (bb, bm, n) gathered
+    candidates → (bb, bm) d2 scores, VPU multiply-reduce with the measure
+    epilogue in-tile (the fold-in analogue of ``knn_topk.tile_sims`` for
+    per-query candidate sets, where no shared GEMM exists)."""
+    q = q_ref[...].astype(jnp.float32)
+    cand = cand_ref[...].astype(jnp.float32)
+    out_ref[...] = _gathered_sims(q, cand, measure)
+
+
+def score_candidates_kernel(
+    q: jax.Array,  # (b, n)
+    cand: jax.Array,  # (b, m, n) gathered candidate rows
+    measure: str = "cosine",
+    block: Tuple[int, int] = (8, 512),
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Pallas wrapper for the per-query scorer: grid over (query, candidate)
+    blocks; each tile's rows/epilogue reductions stay VMEM-resident."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, m, n = cand.shape
+    bb, bm = block
+    bb = min(bb, -(-b // 8) * 8)
+    bm = min(bm, -(-m // 8) * 8)
+    b_pad, m_pad = -(-b // bb) * bb, -(-m // bm) * bm
+    if b_pad != b:
+        q = jnp.pad(q, ((0, b_pad - b), (0, 0)))
+        cand = jnp.pad(cand, ((0, b_pad - b), (0, 0), (0, 0)))
+    if m_pad != m:
+        cand = jnp.pad(cand, ((0, 0), (0, m_pad - m), (0, 0)))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    out = pl.pallas_call(
+        functools.partial(_score_kernel, measure=measure),
+        grid=(b_pad // bb, m_pad // bm),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, bm, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, m_pad), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(q, cand)
+    return out[:b, :m]
+
+
+def _padded_topk(vals: jax.Array, ids: jax.Array, k: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """``lax.top_k`` over (vals, ids) columns, padding m up to k.
+
+    ``top_k`` breaks value ties by the lower *position*, so the caller
+    controls tie canonicalization through column order: the exact path lays
+    candidates out in ascending-id order (ties -> lowest id, the canonical
+    order every streaming scan in ``core.graph`` produces), the per-query
+    path in (probe rank, slot) order (deterministic, and *nested* across
+    nprobe since top-p probes are a prefix of top-(p+1) probes). A full
+    lexicographic argsort would canonicalize too, but costs ~30x more than
+    top_k at serving shapes."""
+    m = vals.shape[1]
+    if m < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - m)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - m)))
+    v, sel = jax.lax.top_k(vals, k)
+    return v, jnp.take_along_axis(ids, sel, axis=1)
+
+
+def resolve_scorer(scorer: str) -> str:
+    if scorer == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if scorer not in SCORERS:
+        raise ValueError(f"unknown scorer {scorer!r}; expected {SCORERS}")
+    return scorer
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nprobe", "measure", "qb", "scorer"))
+def search(
+    index: IVFIndex,
+    queries: jax.Array,  # (b, n) query rows in landmark space
+    k: int,
+    nprobe: int,
+    measure: str = "cosine",
+    *,
+    self_ids: Optional[jax.Array] = None,  # (b,) candidate id of query i
+    qb: int = 256,
+    scorer: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k (vals, ids) per query over the probed cells — self-contained:
+    candidate vectors come from the index's own posting-list payloads.
+
+    Probe the ``nprobe`` centroids nearest to each query (same d2 measure),
+    slice + score their posting lists, exact top-k re-rank. Queries are
+    processed in ``qb``-row blocks so the (qb, nprobe·cap, n) candidate
+    tensor stays bounded.
+
+    ``nprobe == n_clusters`` probes every cell: the candidate matrix is then
+    query-independent (sorted by id once, so top_k's positional tie-break is
+    the canonical id-asc tie-break of the streaming scans) and scored with
+    the same ``dense_similarity`` GEMM the streaming backend uses — the
+    result is **bit-identical** to ``backend="streaming"``
+    (acceptance-tested). Empty slots come back as (-inf, 0), matching the
+    streaming scans; feed through ``graph.finalize_topk`` for a
+    NeighborGraph.
+    """
+    if index.is_compact:
+        index = index.to_full()
+    c, cap = index.n_clusters, index.capacity
+    n = index.rows.shape[2]
+    nprobe = min(nprobe, c)
+    b = queries.shape[0]
+    qb = max(min(qb, -(-max(b, 1) // 8) * 8), 8)  # don't pad skinny batches 4x
+    b_pad = -(-max(b, 1) // qb) * qb
+    q = jnp.pad(queries, ((0, b_pad - b), (0, 0))) if b_pad != b else queries
+    sids = jnp.full((b_pad,), -1, jnp.int32)
+    if self_ids is not None:
+        sids = sids.at[:b].set(self_ids.astype(jnp.int32))
+    slot = jnp.arange(cap)
+
+    if nprobe >= c:
+        # exact path: every cell probed -> one shared candidate matrix, one
+        # GEMM per query block (bitwise == the streaming chunk scan; the
+        # GEMM is invariant to candidate permutation/padding/width).
+        flat = index.lists.reshape(-1).astype(jnp.int32)  # (C*cap,)
+        fvalid = (slot[None, :] < index.fill[:, None]).reshape(-1)
+        order = jnp.argsort(jnp.where(fvalid, flat, jnp.int32(2**31 - 1)))
+        flat, fvalid = flat[order], fvalid[order]
+        cmat = index.rows.reshape(c * cap, n)[order]
+
+        def block(args):
+            qq, ss = args  # (qb, n), (qb,)
+            sims = dense_similarity(qq, cmat, measure)  # (qb, C*cap)
+            invalid = (~fvalid)[None, :] | (flat[None, :] == ss[:, None])
+            return _padded_topk(jnp.where(invalid, -jnp.inf, sims),
+                                jnp.broadcast_to(flat, sims.shape), k)
+
+        vals, ids = jax.lax.map(
+            block, (q.reshape(-1, qb, n), sids.reshape(-1, qb)))
+    else:
+        csims = dense_similarity(q, index.centroids, measure)  # (b_pad, C)
+        _, probe = jax.lax.top_k(csims, nprobe)  # (b_pad, nprobe) cell ids
+        m = nprobe * cap
+        use_pallas = resolve_scorer(scorer) == "pallas"
+
+        def block(args):
+            qq, pr, ss = args  # (qb, n) (qb, nprobe) (qb,)
+            # contiguous (cap, n) slices per probed cell — cheap gather
+            rows = index.rows[pr].reshape(-1, m, n)
+            cc = index.lists[pr].astype(jnp.int32).reshape(-1, m)
+            vv = (slot[None, None, :] < index.fill[pr][..., None]
+                  ).reshape(-1, m)
+            sims = (score_candidates_kernel(qq, rows, measure) if use_pallas
+                    else _gathered_sims(qq, rows, measure))
+            invalid = ~vv | (cc == ss[:, None])
+            return _padded_topk(jnp.where(invalid, -jnp.inf, sims), cc, k)
+
+        vals, ids = jax.lax.map(
+            block, (q.reshape(-1, qb, n), probe.reshape(-1, qb, nprobe),
+                    sids.reshape(-1, qb)))
+    return (vals.reshape(b_pad, k)[:b], ids.reshape(b_pad, k)[:b])
+
+
+def recall_at_k(got_ids: jax.Array, want_ids: jax.Array,
+                got_vals: Optional[jax.Array] = None,
+                want_vals: Optional[jax.Array] = None) -> jax.Array:
+    """Mean fraction of the exact top-k retrieved, per query.
+
+    ``got_vals``/``want_vals`` (raw ``search`` outputs) mask empty slots —
+    -inf values carry id 0, which must neither claim nor count as a hit — and
+    shrink the denominator for rows with fewer than k true neighbors.
+    """
+    hit = (got_ids[:, :, None] == want_ids[:, None, :])  # (b, k, k)
+    if got_vals is not None:
+        hit = hit & jnp.isfinite(got_vals)[:, :, None]
+    if want_vals is not None:
+        ok = jnp.isfinite(want_vals)
+        hit = hit & ok[:, None, :]
+        denom = jnp.maximum(jnp.sum(ok, axis=1), 1)
+    else:
+        denom = want_ids.shape[1]
+    return jnp.mean(jnp.sum(jnp.any(hit, axis=2), axis=1) / denom)

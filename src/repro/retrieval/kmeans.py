@@ -1,0 +1,201 @@
+"""k-means coarse quantizer over the (U, n) landmark embedding.
+
+This is the IVF index's first stage (docs/retrieval.md): Lloyd iterations,
+jit-compiled end-to-end, partition the landmark-space rows into ``n_clusters``
+cells so neighbor search can prune to the ``nprobe`` nearest cells instead of
+scanning all U rows. "Nearest" is always measured with the *same d2 measure*
+the neighbor graph uses (cosine / pearson / euclidean — for euclidean the
+``similarity_from_distance`` transform is monotone decreasing in distance, so
+argmax similarity == argmin distance), which keeps the probe ordering aligned
+with the geometry the graph is built in.
+
+The assignment step is the only O(U·C·n) GEMM per iteration, so it gets the
+same treatment as the graph build: a Pallas kernel (``assign_clusters`` with
+``backend="pallas"``) that reuses the d2 epilogues from
+``kernels/knn_topk.tile_sims`` — one (bu, C) sims tile per grid step, argmax
+on the VPU, only the (bu, 1) assignment ever written to HBM. ``auto`` resolves
+to the kernel on TPU and the plain jnp argmax elsewhere (quantizer quality,
+not bit-exactness, is what matters here: any partition yields an exact index
+at ``nprobe == n_clusters``).
+
+Centroid quality notes: initialization picks ``n_clusters`` distinct valid
+rows (uniform Gumbel-style top-k over masked random keys — jit-friendly even
+with a *traced* ``n_valid``); the update step is the plain Euclidean mean of
+the member rows, with empty clusters keeping their previous centroid. Padded
+rows (``slot >= n_valid``) never influence initialization, assignment counts,
+or means.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# the cosine pre-normalization must stay bit-identical to the graph build's
+# (both feed kernels whose cosine path assumes caller-normalized rows)
+from repro.core.graph import _l2_normalize
+from repro.core.similarity import dense_similarity
+
+ASSIGN_BACKENDS = ("jnp", "pallas", "auto")
+
+
+def resolve_assign_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ASSIGN_BACKENDS:
+        raise ValueError(
+            f"unknown assignment backend {backend!r}; expected {ASSIGN_BACKENDS}")
+    return backend
+
+
+# ------------------------------------------------------- pallas assignment
+def _assign_kernel(rep_ref, cent_ref, out_ref, *, n_clusters, measure):
+    """One (bu, C_pad) sims tile + argmax: the Lloyd assignment hot loop.
+
+    Reuses the exact d2 epilogues of the graph-build kernel
+    (``kernels.knn_topk.tile_sims``): cosine rows are pre-normalized by the
+    caller, pearson/euclidean run their epilogues in-tile. Padded centroid
+    columns are masked to -inf so they are never selected.
+    """
+    from repro.kernels.knn_topk import tile_sims
+
+    rep = rep_ref[...].astype(jnp.float32)  # (bu, n)
+    cent = cent_ref[...].astype(jnp.float32)  # (C_pad, n)
+    sims = tile_sims(rep, cent, measure)  # (bu, C_pad)
+    bu, c_pad = sims.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bu, c_pad), 1)
+    sims = jnp.where(col >= n_clusters, -jnp.inf, sims)
+    out_ref[...] = jnp.argmax(sims, axis=1)[:, None].astype(jnp.int32)
+
+
+def assign_clusters_kernel(
+    rep: jax.Array,  # (U, n) rows (L2-normalized by the caller for cosine)
+    centroids: jax.Array,  # (C, n) centroids (same normalization contract)
+    measure: str = "cosine",
+    block_u: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Per-row nearest-centroid id via the fused Pallas tile kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    u, n = rep.shape
+    c = centroids.shape[0]
+    bu = min(block_u, -(-u // 8) * 8)
+    u_pad = -(-u // bu) * bu
+    c_pad = -(-c // 8) * 8
+    if u_pad != u:
+        rep = jnp.pad(rep, ((0, u_pad - u), (0, 0)))
+    if c_pad != c:
+        centroids = jnp.pad(centroids, ((0, c_pad - c), (0, 0)))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+    out = pl.pallas_call(
+        functools.partial(_assign_kernel, n_clusters=c, measure=measure),
+        grid=(u_pad // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, n), lambda i: (i, 0)),
+            pl.BlockSpec((c_pad, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u_pad, 1), jnp.int32),
+        interpret=interpret,
+        **kwargs,
+    )(rep, centroids)
+    return out[:u, 0]
+
+
+def assign_clusters(
+    rep: jax.Array,  # (U, n) raw landmark-space rows
+    centroids: jax.Array,  # (C, n) raw centroids
+    measure: str = "cosine",
+    backend: str = "auto",
+    *,
+    block_u: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(U,) int32 nearest-centroid id per row under the d2 ``measure``.
+
+    Ties go to the lowest centroid id on both backends (argmax semantics).
+    Inputs are raw rows — normalization (cosine) is handled here so the two
+    backends share one calling convention.
+    """
+    backend = resolve_assign_backend(backend)
+    if backend == "pallas":
+        if measure == "cosine":
+            rep, centroids = _l2_normalize(rep), _l2_normalize(centroids)
+        return assign_clusters_kernel(rep.astype(jnp.float32),
+                                      centroids.astype(jnp.float32), measure,
+                                      block_u=block_u, interpret=interpret)
+    sims = dense_similarity(rep.astype(jnp.float32),
+                            centroids.astype(jnp.float32), measure)
+    return jnp.argmax(sims, axis=1).astype(jnp.int32)
+
+
+def init_centroids(
+    key: jax.Array,
+    rep: jax.Array,  # (U, n)
+    n_clusters: int,
+    n_valid: Optional[jax.Array] = None,  # () int32; rows >= n_valid are padding
+) -> jax.Array:
+    """``n_clusters`` distinct valid rows, chosen uniformly.
+
+    Uniform keys masked to -1 on padded rows + top-k: distinct by
+    construction, jit-friendly with a traced ``n_valid`` (a weighted
+    ``random.choice`` without replacement would need concrete weights).
+    """
+    u = rep.shape[0]
+    keys = jax.random.uniform(key, (u,))
+    if n_valid is not None:
+        keys = jnp.where(jnp.arange(u) < n_valid, keys, -1.0)
+    _, idx = jax.lax.top_k(keys, min(n_clusters, u))
+    cent = rep[idx]
+    if n_clusters > u:  # degenerate tiny-U case: repeat rows
+        cent = jnp.concatenate(
+            [cent, jnp.broadcast_to(cent[:1], (n_clusters - u, rep.shape[1]))])
+    return cent.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "measure", "iters",
+                                             "backend"))
+def kmeans(
+    key: jax.Array,
+    rep: jax.Array,  # (U, n) landmark-space rows (rows >= n_valid: padding)
+    n_clusters: int,
+    measure: str = "cosine",
+    iters: int = 8,
+    n_valid: Optional[jax.Array] = None,  # () int32 traced fill mark
+    backend: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Jit-compiled Lloyd: returns ``(centroids (C, n), assign (U,))``.
+
+    ``assign`` is the final nearest-centroid id per row; padded rows get an
+    arbitrary cluster — callers must mask them (``index.build_index`` sends
+    them to the out-of-range sentinel before packing the posting lists).
+    """
+    u = rep.shape[0]
+    rep32 = rep.astype(jnp.float32)
+    valid = (jnp.arange(u) < n_valid) if n_valid is not None \
+        else jnp.ones((u,), bool)
+    vrep = rep32 * valid[:, None]
+    cent0 = init_centroids(key, rep32, n_clusters, n_valid)
+
+    def step(cent, _):
+        a = assign_clusters(rep32, cent, measure, backend)
+        seg = jnp.where(valid, a, n_clusters)  # padded rows -> dropped segment
+        sums = jax.ops.segment_sum(vrep, seg, num_segments=n_clusters + 1)[:-1]
+        cnt = jax.ops.segment_sum(valid.astype(jnp.float32), seg,
+                                  num_segments=n_clusters + 1)[:-1]
+        new = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1.0),
+                        cent)  # empty cluster: keep the old centroid
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+    return cent, assign_clusters(rep32, cent, measure, backend)

@@ -323,6 +323,61 @@ def test_policy_ignores_small_holdout_and_respects_other_signals():
     assert policy.decide(pol2, spec, _snap(frac=0.7))[0]
 
 
+# --------------------------------------------------- proactive rebalance gate
+
+
+def test_shard_skew_signal():
+    """max/mean fill ratio over any bounded-capacity fill vector — mesh
+    shards and IVF posting lists share it (ROADMAP "proactive rebalance")."""
+    assert monitor.shard_skew(np.array([4, 4, 4, 4])) == 1.0
+    assert monitor.shard_skew(np.array([8, 0, 0, 0])) == 4.0
+    assert monitor.shard_skew(np.array([0, 0])) == 1.0  # empty == balanced
+    assert monitor.shard_skew(jnp.asarray([2, 6])) == 1.5
+    assert _snap().shard_skew == 1.0  # single-device snapshots default clean
+
+
+def test_should_rebalance_hysteresis():
+    """The skew gate fires only after ``rebalance_patience`` consecutive
+    breaches, resets on fire and on a healthy reading, and keeps its streak
+    independent of the refresh-decision streak."""
+    spec = policy.RefreshSpec(max_skew=2.0, rebalance_patience=2)
+    pol = policy.PolicyState()
+    assert not policy.should_rebalance(pol, spec, 3.0)  # breach 1 of 2
+    assert policy.should_rebalance(pol, spec, 3.0)  # fires, resets streak
+    assert not policy.should_rebalance(pol, spec, 3.0)  # streak restarted
+    assert not policy.should_rebalance(pol, spec, 1.9)  # healthy: no fire
+
+    pol2 = policy.PolicyState()
+    assert not policy.should_rebalance(pol2, spec, 3.0)
+    assert not policy.should_rebalance(pol2, spec, 1.0)  # resets the streak
+    assert not policy.should_rebalance(pol2, spec, 3.0)
+    assert policy.should_rebalance(pol2, spec, 3.0)
+
+    pol3 = policy.PolicyState(base_mae=1.0)  # independent of refresh streak
+    policy.decide(pol3, policy.RefreshSpec(patience=2, mae_ratio=1.1),
+                  _snap(mae=1.5))
+    assert pol3.streak == 1 and pol3.skew_streak == 0
+    policy.should_rebalance(pol3, spec, 3.0)
+    assert pol3.streak == 1 and pol3.skew_streak == 1
+
+
+def test_refresh_manager_rebuilds_ivf_index_inside_swap(tmp_path, fitted):
+    """RefreshManager(ivf=...) commits (generation, state, index) — the
+    retrieval index is rebuilt on the refitted embedding inside the
+    background swap and covers every refitted row exactly once."""
+    from repro.retrieval import IVFSpec
+
+    st, r = fitted
+    mgr = RefreshManager(str(tmp_path), SPEC, ivf=IVFSpec(n_clusters=6))
+    assert mgr.request(np.asarray(r), generation=1)
+    mgr.join()
+    gen, st_new, index = mgr.poll()
+    assert gen == 1 and index.n_clusters == 6
+    lists, fill = np.asarray(index.lists), np.asarray(index.fill)
+    ids = sorted(i for c in range(6) for i in lists[c, :fill[c]])
+    assert ids == list(range(st_new.representation.shape[0]))
+
+
 # ------------------------------------------------------- refresh + checkpoint
 
 

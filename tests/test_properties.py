@@ -168,6 +168,39 @@ def test_bucketed_state_is_bit_identical_and_pad_free(seed, extra_cap, b):
     assert (w[n:] == 0).all()  # padding rows stay inert
 
 
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["cosine", "pearson", "euclidean"]))
+@settings(max_examples=9, deadline=None)
+def test_ivf_recall_monotone_in_nprobe_and_exact_at_full_probe(seed, measure):
+    """IVF retrieval property (ISSUE 5 acceptance): recall@k vs the exact
+    path is monotonically non-decreasing in nprobe — probe sets are nested
+    (top-p centroids are a prefix of top-(p+1)), candidate scores are
+    m-invariant, and tie-breaking is probe-order-consistent — and exactly
+    1.0 at nprobe == n_clusters, for every d2 measure."""
+    from repro.retrieval import IVFSpec, build_index, recall_at_k, resolve_ivf, search
+
+    rng = np.random.default_rng(seed)
+    u, p, k = 96, 48, 7
+    r = rng.integers(1, 6, (u, p)).astype(np.float32)
+    r *= rng.random((u, p)) < 0.4
+    from repro.core.similarity import masked_similarity
+
+    rep = masked_similarity(jnp.asarray(r), jnp.asarray(r[:8]), "cosine")
+    cfg = resolve_ivf(IVFSpec(n_clusters=8, seed=seed % 7), u)
+    idx = build_index(rep, cfg, measure)
+    self_ids = jnp.arange(u)
+    want_v, want_i = search(idx, rep, k, idx.n_clusters, measure,
+                            self_ids=self_ids)
+    prev = -1.0
+    for nprobe in range(1, idx.n_clusters + 1):
+        got_v, got_i = search(idx, rep, k, nprobe, measure,
+                              self_ids=self_ids)
+        rec = float(recall_at_k(got_i, want_i, got_v, want_v))
+        assert rec >= prev - 1e-6, (nprobe, rec, prev)
+        prev = rec
+    assert prev == 1.0  # full probe retrieves the exact top-k, always
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_quantized_compression_error_bound(seed):

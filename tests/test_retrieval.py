@@ -1,0 +1,340 @@
+"""IVF retrieval subsystem (repro.retrieval): exactness, invariants, wiring.
+
+The acceptance contract (ISSUE 5 / docs/retrieval.md):
+
+- ``search(..., nprobe == n_clusters)`` is **bit-identical** to the streaming
+  backend on all three d2 measures, on both the graph-build and the fold-in
+  (extend) paths;
+- posting lists hold every valid row id exactly once, through build, masked
+  append, spill, capacity regrowth, and compaction;
+- the ``backend="ivf"`` wiring in core.graph / core.landmark_cf produces the
+  same artifacts as calling the retrieval API directly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LandmarkSpec,
+    MEASURES,
+    RatingMatrix,
+    build_neighbor_graph,
+    fit,
+    fold_in,
+    predict,
+)
+from repro.core.graph import _streaming_query_topk, finalize_topk
+from repro.core.similarity import streaming_knn_graph
+from repro.retrieval import (
+    IVFSpec,
+    append,
+    assign_clusters,
+    build_index,
+    ensure_index_capacity,
+    kmeans,
+    recall_at_k,
+    resolve_ivf,
+    score_candidates_kernel,
+    search,
+)
+from repro.retrieval.index import _gathered_sims
+
+
+def _rep(u, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(u, n)).astype(np.float32))
+
+
+def _ratings(u, p, density=0.35, seed=0):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(1, 6, (u, p)).astype(np.float32)
+    r *= rng.random((u, p)) < density
+    return jnp.asarray(r)
+
+
+def _list_ids(index):
+    lists, fill = np.asarray(index.to_full().lists), np.asarray(index.fill)
+    return sorted(i for c in range(lists.shape[0]) for i in lists[c, :fill[c]])
+
+
+# ------------------------------------------------------------- exactness
+@pytest.mark.parametrize("measure", MEASURES)
+def test_full_probe_search_bitwise_equals_streaming(measure):
+    """Acceptance: nprobe == n_clusters == the streaming graph build, bitwise
+    — same similarity bits (shared-candidate GEMM) and same (weight desc,
+    id asc) tie canonicalization."""
+    u, n, k = 300, 16, 9
+    rep = _rep(u, n)
+    idx = build_index(rep, resolve_ivf(IVFSpec(), u), measure)
+    v_s, i_s = streaming_knn_graph(rep, measure, k=k, chunk=64,
+                                   exclude_self=True)
+    v_e, i_e = search(idx, rep, k, idx.n_clusters, measure,
+                      self_ids=jnp.arange(u))
+    gs, ge = finalize_topk(v_s, i_s), finalize_topk(v_e, i_e)
+    np.testing.assert_array_equal(np.asarray(gs.indices), np.asarray(ge.indices))
+    np.testing.assert_array_equal(np.asarray(gs.weights), np.asarray(ge.weights))
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_full_probe_foldin_bitwise_equals_streaming(measure):
+    """Acceptance, fold-in path: append the batch, search at nprobe == C ==
+    the streaming new-vs-all scan, bitwise."""
+    u, b, n, k = 300, 12, 16, 7
+    rep, new_rep = _rep(u, n), _rep(b, n, seed=1)
+    cand = jnp.concatenate([rep, new_rep])
+    idx = build_index(rep, resolve_ivf(IVFSpec(), u), measure)
+    idx = append(idx, new_rep, u + jnp.arange(b), measure)
+    v_s, i_s = _streaming_query_topk(new_rep, cand, measure, k, 64,
+                                     self_offset=u)
+    v_e, i_e = search(idx, new_rep, k, idx.n_clusters, measure,
+                      self_ids=u + jnp.arange(b))
+    gs, ge = finalize_topk(v_s, i_s), finalize_topk(v_e, i_e)
+    np.testing.assert_array_equal(np.asarray(gs.indices), np.asarray(ge.indices))
+    np.testing.assert_array_equal(np.asarray(gs.weights), np.asarray(ge.weights))
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_graph_backend_ivf_full_probe_equals_streaming_backend(measure):
+    """The core.graph wiring: backend="ivf" at full probe == backend=
+    "streaming", bitwise, including k clamping and finalization."""
+    rep = _rep(200, 12, seed=2)
+    cfg = IVFSpec(n_clusters=10, nprobe=10)
+    g_ivf = build_neighbor_graph(rep, measure, k=6, backend="ivf", ivf=cfg)
+    g_str = build_neighbor_graph(rep, measure, k=6, backend="streaming")
+    np.testing.assert_array_equal(np.asarray(g_ivf.indices),
+                                  np.asarray(g_str.indices))
+    np.testing.assert_array_equal(np.asarray(g_ivf.weights),
+                                  np.asarray(g_str.weights))
+
+
+def test_fold_in_backend_ivf_full_probe_matches_streaming():
+    """End-to-end serve path: fold_in with the IVF backend at full probe
+    predicts identically to the streaming fold_in."""
+    u, b, p = 300, 12, 64
+    r = _ratings(u + b, p, seed=3)
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity", k_neighbors=5)
+    st = fit(jax.random.PRNGKey(0), RatingMatrix(r[:u], u, p), spec,
+             backend="streaming")
+    cfg = IVFSpec(n_clusters=12, nprobe=12)
+    st_ivf = fold_in(st, r[u:], spec, backend="ivf", ivf=cfg)
+    st_str = fold_in(st, r[u:], spec, backend="streaming")
+    rng = np.random.default_rng(4)
+    users = jnp.asarray(rng.integers(0, u + b, 300).astype(np.int32))
+    items = jnp.asarray(rng.integers(0, p, 300).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(predict(st_ivf, users, items, spec)),
+        np.asarray(predict(st_str, users, items, spec)))
+
+
+def test_default_nprobe_recall_reasonable_and_full_probe_perfect():
+    rep = _rep(400, 16, seed=5)
+    cfg = resolve_ivf(IVFSpec(), 400)
+    idx = build_index(rep, cfg, "cosine")
+    k = 10
+    ve, ie = search(idx, rep, k, idx.n_clusters, "cosine",
+                    self_ids=jnp.arange(400))
+    va, ia = search(idx, rep, k, cfg.nprobe, "cosine",
+                    self_ids=jnp.arange(400))
+    rec = float(recall_at_k(ia, ie, va, ve))
+    assert 0.3 < rec <= 1.0  # approximate but sane on unstructured data
+    assert float(recall_at_k(ie, ie, ve, ve)) == 1.0
+
+
+# ------------------------------------------------------- index invariants
+def test_build_covers_every_row_exactly_once():
+    rep = _rep(257, 8, seed=6)  # deliberately not a multiple of anything
+    idx = build_index(rep, resolve_ivf(IVFSpec(), 257), "cosine")
+    assert _list_ids(idx) == list(range(257))
+
+
+def test_masked_append_and_spill_never_drop_rows():
+    """Tiny capacity forces deep spill; every valid id still lands exactly
+    once and filler batch rows are dropped."""
+    rep = _rep(40, 8, seed=7)
+    idx = build_index(rep[:40], resolve_ivf(IVFSpec(n_clusters=4, slack=1.0),
+                                            40), "cosine")
+    new = _rep(24, 8, seed=8)
+    idx = append(idx, new, jnp.arange(40, 64), "cosine",
+                 b_valid=jnp.int32(20))  # 4 filler rows must vanish
+    assert _list_ids(idx) == list(range(60))
+    assert int(np.asarray(idx.fill).sum()) == 60
+
+
+def test_spill_prefers_next_nearest_cell():
+    """A row whose home cell is full must land in its next-nearest cell (the
+    multi-choice rounds), not an arbitrary free slot."""
+    from repro.retrieval.index import _list_choices
+
+    rep = _rep(64, 8, seed=9)
+    cfg = resolve_ivf(IVFSpec(n_clusters=8, slack=2.0), 64)
+    idx = build_index(rep, cfg, "cosine")
+    # fill the new row's home cell completely, then append it
+    new = _rep(1, 8, seed=10)
+    choices = np.asarray(_list_choices(new, idx.centroids, "cosine", 8))[0]
+    home = int(choices[0])
+    cap = idx.capacity
+    room = cap - int(np.asarray(idx.fill)[home])
+    stuff = jnp.broadcast_to(idx.centroids[home], (room, 8))  # all -> home
+    idx2 = append(idx, stuff, 100 + jnp.arange(room), "cosine")
+    fill_after = np.asarray(idx2.fill)
+    assert fill_after[home] == cap  # home now full
+    idx3 = append(idx2, new, jnp.asarray([999]), "cosine")
+    lists = np.asarray(idx3.lists)
+    fill3 = np.asarray(idx3.fill)
+    placed_in = [c for c in range(8) if 999 in lists[c, :fill3[c]]]
+    # must sit in the best *non-full* choice, in preference order
+    want = next(int(c) for c in choices if fill_after[int(c)] < cap)
+    assert placed_in == [want], (placed_in, want, choices, fill_after)
+
+
+def test_extend_ivf_on_exactly_full_index_reserves_room_and_stays_exact():
+    """Regression: an index with zero free slots (slack=1.0 packs C*cap == U)
+    must not silently drop the fold-in batch — extend_neighbor_graph reserves
+    room in-trace (grow_capacity, static shapes) before the append, and the
+    full-probe extend stays bit-identical to streaming."""
+    from repro.core import build_neighbor_graph, extend_neighbor_graph
+    from repro.retrieval import grow_capacity
+
+    u, b, n, k = 256, 16, 8, 5
+    rep, new_rep = _rep(u, n, seed=30), _rep(b, n, seed=31)
+    cfg = resolve_ivf(IVFSpec(n_clusters=8, nprobe=8, slack=1.0), u)
+    idx = build_index(rep, cfg, "cosine")
+    assert idx.n_clusters * idx.capacity == u  # no free slot anywhere
+
+    # direct append on the full index WOULD drop; the traced grow reserves
+    grown = grow_capacity(idx, idx.capacity + 8)
+    grown = append(grown, new_rep, u + jnp.arange(b), "cosine")
+    assert _list_ids(grown) == list(range(u + b))
+
+    g0 = build_neighbor_graph(rep, "cosine", k=k, backend="streaming")
+    g_ivf = extend_neighbor_graph(g0, rep, new_rep, "cosine", backend="ivf",
+                                  ivf=cfg, ivf_index=idx)
+    g_str = extend_neighbor_graph(g0, rep, new_rep, "cosine",
+                                  backend="streaming")
+    np.testing.assert_array_equal(np.asarray(g_ivf.indices),
+                                  np.asarray(g_str.indices))
+    np.testing.assert_array_equal(np.asarray(g_ivf.weights),
+                                  np.asarray(g_str.weights))
+
+
+def test_ensure_index_capacity_regrows_and_search_is_unchanged():
+    rep = _rep(120, 8, seed=11)
+    idx = build_index(rep, resolve_ivf(IVFSpec(n_clusters=6), 120), "cosine")
+    idx2, grew = ensure_index_capacity(idx, incoming=4 * idx.capacity)
+    assert grew and idx2.capacity > idx.capacity
+    assert _list_ids(idx2) == _list_ids(idx)
+    q = _rep(16, 8, seed=12)
+    v1, i1 = search(idx, q, 5, 3, "cosine")
+    v2, i2 = search(idx2, q, 5, 3, "cosine")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_search_excludes_self():
+    rep = _rep(100, 8, seed=13)
+    idx = build_index(rep, resolve_ivf(IVFSpec(), 100), "cosine")
+    for nprobe in (3, idx.n_clusters):
+        _, ids = search(idx, rep, 5, nprobe, "cosine",
+                        self_ids=jnp.arange(100))
+        assert not (np.asarray(ids) == np.arange(100)[:, None]).any()
+
+
+def test_build_with_n_valid_excludes_padded_rows():
+    rep = _rep(128, 8, seed=14)
+    idx = build_index(rep, resolve_ivf(IVFSpec(), 100), "cosine",
+                      n_valid=jnp.int32(100))
+    assert _list_ids(idx) == list(range(100))
+    _, ids = search(idx, rep[:16], 5, idx.n_clusters, "cosine")
+    assert np.asarray(ids).max() < 100
+
+
+# ----------------------------------------------------------- compact storage
+def test_compact_index_roundtrip_and_search_identical():
+    """Satellite: uint16 posting lists round-trip exactly and search results
+    (which widen on the fly) are bit-identical — --compact-serving covers
+    the index."""
+    rep = _rep(300, 8, seed=15)
+    idx = build_index(rep, resolve_ivf(IVFSpec(), 300), "cosine")
+    ci = idx.to_compact()
+    assert ci.is_compact and ci.lists.dtype == jnp.uint16
+    assert not idx.is_compact
+    assert ci.lists.nbytes * 2 == idx.lists.nbytes
+    np.testing.assert_array_equal(np.asarray(ci.to_full().lists),
+                                  np.asarray(idx.lists))
+    q = rep[:24]
+    for nprobe in (4, idx.n_clusters):
+        v1, i1 = search(idx, q, 7, nprobe, "cosine")
+        v2, i2 = search(ci, q, 7, nprobe, "cosine")
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    # appends widen a compact index transparently
+    idx2 = append(ci, _rep(4, 8, seed=16), 300 + jnp.arange(4), "cosine")
+    assert not idx2.is_compact
+    assert _list_ids(idx2) == list(range(304))
+
+
+def test_compact_rejects_large_ids():
+    from repro.retrieval.index import IVFIndex
+
+    big = IVFIndex(jnp.zeros((2, 4)), jnp.full((2, 8), 70_000, jnp.int32),
+                   jnp.zeros((2, 8, 4)), jnp.full((2,), 8, jnp.int32))
+    with pytest.raises(ValueError, match="65535"):
+        big.to_compact()
+
+
+# ------------------------------------------------------------------ kernels
+@pytest.mark.parametrize("measure", MEASURES)
+def test_pallas_assignment_kernel_matches_jnp(measure):
+    """The Lloyd assignment kernel (interpret mode on CPU) reuses the
+    knn_topk epilogues; argmax cells match the jnp path."""
+    rep = _rep(70, 12, seed=17)
+    cent = _rep(9, 12, seed=18)
+    a_jnp = assign_clusters(rep, cent, measure, "jnp")
+    a_pal = assign_clusters(rep, cent, measure, "pallas")
+    np.testing.assert_array_equal(np.asarray(a_jnp), np.asarray(a_pal))
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_pallas_score_kernel_matches_jnp(measure):
+    """The skinny gather+score kernel (interpret mode on CPU) matches the
+    jnp multiply-reduce scorer to float tolerance."""
+    q = _rep(13, 12, seed=19)
+    rng = np.random.default_rng(20)
+    cand = jnp.asarray(rng.normal(size=(13, 37, 12)).astype(np.float32))
+    got = score_candidates_kernel(q, cand, measure)
+    want = _gathered_sims(q, cand, measure)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_is_deterministic_and_centroids_finite():
+    rep = _rep(150, 8, seed=21)
+    c1, a1 = kmeans(jax.random.PRNGKey(3), rep, 10, "cosine", iters=4)
+    c2, a2 = kmeans(jax.random.PRNGKey(3), rep, 10, "cosine", iters=4)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.isfinite(np.asarray(c1)).all()
+    assert 0 <= int(np.asarray(a1).min()) and int(np.asarray(a1).max()) < 10
+
+
+def test_ivf_index_pytree_roundtrip():
+    rep = _rep(64, 8, seed=22)
+    idx = build_index(rep, resolve_ivf(IVFSpec(), 64), "cosine")
+    leaves, treedef = jax.tree_util.tree_flatten(idx)
+    idx2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert idx2.n_clusters == idx.n_clusters
+    assert idx2.capacity == idx.capacity
+
+
+def test_resolve_ivf_defaults_and_clamps():
+    cfg = resolve_ivf(None, 10_000)
+    assert cfg.n_clusters == 100
+    assert cfg.nprobe == 25
+    assert cfg.spill_choices == 100  # full preference order by default
+    tiny = resolve_ivf(IVFSpec(n_clusters=64, nprobe=99), 8)
+    assert tiny.n_clusters <= 8 and tiny.nprobe <= tiny.n_clusters
+    capped = resolve_ivf(IVFSpec(spill_choices=3), 10_000)
+    assert capped.spill_choices == 3
