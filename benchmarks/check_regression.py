@@ -1,0 +1,212 @@
+"""Perf-ledger regression gate over the committed bench trajectories.
+
+``BENCH_retrieval.json`` and ``BENCH_serving.json`` at the repo root are
+*committed* trajectory files: every PR that touches the serve/retrieval perf
+surface appends one entry, so the files are the performance history of the
+repo — reviewable in the diff, bisectable in git. Each file carries its own
+schema::
+
+    {
+      "directions": {"ivf_speedup": "higher", ...},   # per-metric polarity
+      "entries": [
+        {"pr": "...", "date": "YYYY-MM-DD", "source": "bench cmd",
+         "metrics": {"ivf_speedup": 12.4, ...}},
+        ...
+      ]
+    }
+
+Only *ratio* metrics (speedups, recalls, parity bits) go in the ledger —
+they are stable across machines in a way absolute microseconds are not.
+
+Per-PR workflow (append runs on the dev machine, check runs everywhere)::
+
+    PYTHONPATH=src python -m benchmarks.run --ivf-only --json /tmp/a.json
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.run --ivf-sharded-only --json /tmp/b.json
+    python -m benchmarks.check_regression append --ledger BENCH_retrieval.json \
+        --rows /tmp/a.json --rows /tmp/b.json --pr "PR N: title" --date ...
+
+CI gate (deterministic — compares the last two committed entries)::
+
+    python -m benchmarks.check_regression check \
+        --ledger BENCH_retrieval.json --ledger BENCH_serving.json
+
+``check`` exits 1 when any metric of the newest entry regresses more than
+``--tolerance`` (default 10%) against the previous entry: a "higher" metric
+must stay >= prev*(1-tol), a "lower" metric <= prev*(1+tol). With ``--rows``
+it instead compares freshly measured rows against the newest committed
+entry — the opt-in live mode for perf work on a quiet machine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+# metric name -> (bench row-name prefix, derived key). The ledger's own
+# "directions" dict decides which of these a given ledger tracks.
+METRIC_SOURCES = {
+    "ivf_speedup": ("ivf_vs_streaming", "speedup"),
+    "ivf_recall": ("ivf_vs_streaming", "recall_at_k"),
+    "ivf_sharded_speedup": ("ivf_sharded", "speedup"),
+    "ivf_sharded_recall": ("ivf_sharded", "recall_at_k"),
+    "fused_bitwise_full_probe": ("fused_probe", "bitwise_full_probe"),
+    "bf16_recall": ("payload_quantization", "bf16_recall"),
+    "int8_recall": ("payload_quantization", "int8_recall"),
+    "foldin_speedup": ("foldin_vs_refit", "speedup"),
+    "refresh_stall_ratio": ("refresh_vs_refit", "stall_ratio"),
+    "sharded_foldin_ratio": ("sharded_foldin_vs_single", "ratio"),
+}
+
+
+def _parse_value(raw: str) -> float:
+    """'12.4x' -> 12.4, 'True' -> 1.0, '0.981:1.3MB' -> 0.981."""
+    raw = raw.split(":")[0].strip()
+    if raw in ("True", "False"):
+        return 1.0 if raw == "True" else 0.0
+    for suffix in ("x", "MB", "ms", "s"):
+        if raw.endswith(suffix):
+            raw = raw[: -len(suffix)]
+            break
+    return float(raw)
+
+
+def _derived_map(derived: str) -> Dict[str, str]:
+    out = {}
+    for part in derived.split(";"):
+        key, eq, val = part.partition("=")
+        if eq:
+            out[key.strip()] = val.strip()
+    return out
+
+
+def extract_metrics(rows: List[dict], wanted: Dict[str, str]) -> Dict[str, float]:
+    """Pull the ledger's metrics out of ``benchmarks.run --json`` rows."""
+    got: Dict[str, float] = {}
+    for name, (prefix, key) in METRIC_SOURCES.items():
+        if name not in wanted:
+            continue
+        for row in rows:
+            if not row["name"].startswith(prefix):
+                continue
+            if row["name"].startswith(f"{prefix}[skipped]"):
+                continue
+            d = _derived_map(row.get("derived", ""))
+            if key in d:
+                got[name] = _parse_value(d[key])
+                break
+    return got
+
+
+def _load(path: str) -> dict:
+    return json.loads(Path(path).read_text())
+
+
+def _compare(name: str, new: float, prev: float, direction: str,
+             tol: float) -> str:
+    """'' when within tolerance, else the failure description."""
+    if direction == "higher":
+        floor = prev * (1.0 - tol)
+        if new < floor:
+            return (f"{name}: {new:.3f} < {floor:.3f} "
+                    f"(prev {prev:.3f} - {tol:.0%})")
+    else:
+        ceil = prev * (1.0 + tol)
+        if new > ceil:
+            return (f"{name}: {new:.3f} > {ceil:.3f} "
+                    f"(prev {prev:.3f} + {tol:.0%})")
+    return ""
+
+
+def cmd_check(args) -> int:
+    live = None
+    if args.rows:
+        live = []
+        for p in args.rows:
+            live.extend(_load(p))
+    failures = []
+    for lpath in args.ledger:
+        ledger = _load(lpath)
+        entries = ledger.get("entries", [])
+        directions = ledger.get("directions", {})
+        if not entries:
+            print(f"{lpath}: no entries — nothing to check")
+            continue
+        if live is not None:
+            new = extract_metrics(live, directions)
+            prev, prev_tag = entries[-1]["metrics"], entries[-1]["pr"]
+            new_tag = "live rows"
+        elif len(entries) < 2:
+            print(f"{lpath}: baseline entry only ({entries[-1]['pr']}) — "
+                  "regression check passes trivially")
+            continue
+        else:
+            new, new_tag = entries[-1]["metrics"], entries[-1]["pr"]
+            prev, prev_tag = entries[-2]["metrics"], entries[-2]["pr"]
+        for name, direction in directions.items():
+            if name not in prev:
+                continue
+            if name not in new:
+                failures.append(f"{lpath}: {name} present in '{prev_tag}' "
+                                f"but missing from '{new_tag}'")
+                continue
+            msg = _compare(name, new[name], prev[name], direction,
+                           args.tolerance)
+            if msg:
+                failures.append(f"{lpath}: {msg}")
+            else:
+                print(f"{lpath}: {name} {prev[name]:.3f} -> "
+                      f"{new[name]:.3f} ok")
+    if failures:
+        print("PERF REGRESSION (>" + f"{args.tolerance:.0%} vs previous "
+              "ledger entry):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("perf ledger: all metrics within tolerance")
+    return 0
+
+
+def cmd_append(args) -> int:
+    rows: List[dict] = []
+    for p in args.rows:
+        rows.extend(_load(p))
+    ledger = _load(args.ledger[0])
+    metrics = extract_metrics(rows, ledger.get("directions", {}))
+    missing = set(ledger.get("directions", {})) - set(metrics)
+    if missing:
+        print(f"warning: rows did not produce {sorted(missing)} — entry "
+              "will omit them (the check flags the gap on the next PR)")
+    entry = {"pr": args.pr, "date": args.date,
+             "source": args.source or "benchmarks.run", "metrics": metrics}
+    ledger.setdefault("entries", []).append(entry)
+    Path(args.ledger[0]).write_text(json.dumps(ledger, indent=2) + "\n")
+    print(f"{args.ledger[0]}: appended entry '{args.pr}' with "
+          f"{len(metrics)} metrics")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="fail on >tolerance regression "
+                         "between the last two ledger entries")
+    chk.add_argument("--ledger", action="append", required=True)
+    chk.add_argument("--rows", action="append", default=None,
+                     help="live benchmarks.run --json dumps: compare these "
+                     "against the newest committed entry instead")
+    chk.add_argument("--tolerance", type=float, default=0.10)
+    app = sub.add_parser("append", help="append a PR's measured entry")
+    app.add_argument("--ledger", action="append", required=True)
+    app.add_argument("--rows", action="append", required=True)
+    app.add_argument("--pr", required=True)
+    app.add_argument("--date", required=True, help="YYYY-MM-DD")
+    app.add_argument("--source", default=None)
+    args = ap.parse_args(argv)
+    return cmd_check(args) if args.cmd == "check" else cmd_append(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -150,6 +150,57 @@ def _bench_ivf_vs_streaming():
           f"/{iv['n_clusters']};build_s={iv['build_s']:.2f}")
 
 
+def _bench_ivf_sharded(scale="ci"):
+    """`ivf_sharded`: probe-routed sharded IVF search vs the streaming mesh
+    scan — the million-user retrieval acceptance row (>= 3x at recall@k
+    >= 0.95 with the request path moving only (b, k) merged lists, measured
+    at --scale full; the ci scale tracks the machinery on small runners)."""
+    rows = paper_tables.ivf_sharded_bench(scale=scale)
+    if not rows:
+        _emit("ivf_sharded[skipped]", 0.0,
+              "needs >=2 devices; run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8")
+        return
+    by = {r["variant"]: r for r in rows}
+    ms, iv = by["mesh_stream"], by["ivf_sharded"]
+    _emit(f"ivf_sharded[scale={scale},u={iv['u']},b=64,S={iv['devices']},"
+          f"C={iv['n_clusters']}]",
+          iv["search_s"] * 1e6,
+          f"mesh_stream_ms={ms['search_s'] * 1e3:.2f};"
+          f"ivf_ms={iv['search_s'] * 1e3:.2f};"
+          f"speedup={ms['search_s'] / max(iv['search_s'], 1e-9):.1f}x;"
+          f"recall_at_k={iv['recall']:.3f};nprobe={iv['nprobe']}"
+          f"/{iv['n_clusters']};budget={iv['local_budget']}/shard;"
+          f"probed_per_query={iv['probed_per_query']:.1f};"
+          f"build_s={iv['build_s']:.2f}")
+
+
+def _bench_fused_probe():
+    """`fused_probe`: fused Pallas probe kernel vs the jnp scorer. The
+    load-bearing field on CPU (interpret mode) is the full-probe bitwise
+    parity; wall time is the TPU story."""
+    rows = paper_tables.fused_probe_bench()
+    by = {r["variant"]: r for r in rows}
+    j, f = by["jnp"], by["fused"]
+    _emit(f"fused_probe[u=2048,b=32,backend={f['backend']}]",
+          f["search_s"] * 1e6,
+          f"jnp_ms={j['search_s'] * 1e3:.2f};"
+          f"fused_ms={f['search_s'] * 1e3:.2f};"
+          f"bitwise_full_probe={f['bitwise_full_probe']}")
+
+
+def _bench_payload_quantization():
+    """`payload_quantization`: recall-vs-bandwidth of f32/bf16/int8 posting
+    payloads at fixed nprobe (docs/retrieval.md carries the table)."""
+    rows = paper_tables.payload_quantization_bench()
+    by = {r["variant"]: r for r in rows}
+    _emit(f"payload_quantization[u=8192,nprobe={rows[0]['nprobe']}]",
+          0.0,
+          ";".join(f"{d}_recall={by[d]['recall']:.3f}"
+                   f":{by[d]['payload_mb']:.1f}MB"
+                   for d in ("f32", "bf16", "int8")))
+
+
 def _bench_sharded_foldin():
     """`sharded_foldin_vs_single`: mesh fold-in vs single-device fold-in.
 
@@ -197,6 +248,20 @@ def main(argv=None) -> None:
     ap.add_argument("--ivf-only", action="store_true",
                     help="emit only the ivf_vs_streaming row (the CI "
                     "retrieval bench step)")
+    ap.add_argument("--ivf-sharded-only", action="store_true",
+                    help="emit only the ivf_sharded + fused_probe + "
+                    "payload_quantization rows (the CI million-user "
+                    "retrieval bench step; run under a forced 8-device "
+                    "host platform)")
+    ap.add_argument("--serving-only", action="store_true",
+                    help="emit only the serving-ledger rows (foldin_vs_refit"
+                    " + refresh_vs_refit + sharded_foldin_vs_single) — the "
+                    "BENCH_serving.json trajectory source")
+    ap.add_argument("--scale", choices=("ci", "full"), default="ci",
+                    help="geometry for the ivf_sharded family: 'full' is "
+                    "the committed BENCH_retrieval.json acceptance scale "
+                    "(u=512k — minutes of k-means), 'ci' a small-runner "
+                    "smoke of the same machinery")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows as a JSON list; "
                     "skipped rows are included, so partial runs stay valid")
@@ -210,6 +275,18 @@ def main(argv=None) -> None:
         _bench_sharded_foldin()
     elif args.ivf_only:
         _bench_ivf_vs_streaming()  # explicitly selected: no guard, see above
+    elif args.ivf_sharded_only:
+        # explicitly selected: no guard — the dedicated CI step must fail
+        # loudly when the probe router, kernel parity, or quantization curve
+        # regresses (the device-count skip still emits a [skipped] row)
+        _bench_ivf_sharded(args.scale)
+        _bench_fused_probe()
+        _bench_payload_quantization()
+    elif args.serving_only:
+        # the three serving-ledger families, unguarded for the same reason
+        _bench_foldin_vs_refit()
+        _bench_refresh_vs_refit()
+        _bench_sharded_foldin()
     else:
         datasets = ["movielens100k", "netflix100k"]
         if args.full:
@@ -238,6 +315,12 @@ def main(argv=None) -> None:
         _guard("ivf_vs_streaming", _bench_ivf_vs_streaming)
         # Beyond-paper: mesh-sharded fold-in vs single-device
         _guard("sharded_foldin_vs_single", _bench_sharded_foldin)
+        # Beyond-paper: probe-routed sharded IVF vs the streaming mesh scan
+        _guard("ivf_sharded", lambda: _bench_ivf_sharded(args.scale))
+        # Beyond-paper: fused Pallas probe kernel parity + timing
+        _guard("fused_probe", _bench_fused_probe)
+        # Beyond-paper: posting-payload quantization recall/bandwidth curve
+        _guard("payload_quantization", _bench_payload_quantization)
         # Roofline rows from the dry-run artifacts, if present
         _guard("roofline", _bench_roofline)
 

@@ -186,6 +186,25 @@ def repack_row_blocks(x: "np.ndarray", n_shards: int, old_capacity: int,
     return np.pad(blocks, pad).reshape((n_shards * new_capacity,) + x.shape[1:])
 
 
+def repack_row_blocks_device(x: jax.Array, n_shards: int, old_capacity: int,
+                             new_capacity: int, mesh: Mesh, axes) -> jax.Array:
+    """Device-side :func:`repack_row_blocks` — no host round-trip.
+
+    The (S*C_old, ...) -> (S, C_old, ...) reshape, the zero-pad of the slot
+    axis and the reshape back are all block-local under the row sharding
+    (S divides the leading dim the same way the sharding does), so the regrow
+    compiles to a per-device pad; the trailing ``device_put`` re-asserts the
+    canonical row sharding without moving payload across hosts.
+    """
+    assert new_capacity >= old_capacity, (old_capacity, new_capacity)
+    blocks = x.reshape((n_shards, old_capacity) + x.shape[1:])
+    pad = [(0, 0)] * blocks.ndim
+    pad[1] = (0, new_capacity - old_capacity)
+    out = jax.numpy.pad(blocks, pad).reshape(
+        (n_shards * new_capacity,) + x.shape[1:])
+    return jax.device_put(out, cf_row_sharding(mesh, axes, ndim=x.ndim))
+
+
 def shard_local_append(x: jax.Array, rows: jax.Array, n_valid: jax.Array,
                        target: jax.Array, mesh: Mesh, axes) -> jax.Array:
     """Write ``rows`` into shard ``target`` at its fill offset — the

@@ -554,9 +554,25 @@ def _serve_cf_lifecycle(args):
                 print(f"wave {wave}: ivf recall below SLO -> nprobe "
                       f"escalated to {esc}/{index.n_clusters} "
                       f"(recall {rec:.3f})")
+            ee_note = ""
+            if args.early_exit:
+                # adaptive probing atop the escalated budget: the escalation
+                # loop sets the worst-case nprobe that holds the SLO; early
+                # exit then lets each query stop as soon as its own top-k
+                # stops moving, so mean probed-cells/query is what serving
+                # actually pays
+                qids, qrep, kk, (ve, ie) = probe
+                va, ia, probed = rt.search_early_exit(
+                    index, qrep, kk, retrieval.nprobe, spec.d2,
+                    self_ids=qids)
+                ee_rec = float(rt.recall_at_k(ia, ie, va, ve))
+                probed_q = float(jnp.mean(probed))
+                ee_note = (f" probed/q={probed_q:.1f}/{retrieval.nprobe} "
+                           f"(early-exit recall {ee_rec:.3f})")
             recalls.append(rec)
             ivf_note = (f" | ivf recall@{bst.state.graph.k}={rec:.3f} "
-                        f"nprobe={retrieval.nprobe} skew={skew:.2f}")
+                        f"nprobe={retrieval.nprobe} skew={skew:.2f}"
+                        + ee_note)
         print(f"wave {wave}: gen {pol.generation} U={int(bst.n_valid)}"
               f"/cap{bst.capacity} predict {args.requests}x{args.batch} pairs "
               f"p50={p50:.2f}ms p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
@@ -677,6 +693,81 @@ def _foldin_replication_check(sst, bq, spec):
     return len(seen), bad, row_sharded
 
 
+def _ivf_retrieval_materialization_check(index, qb, k, nprobe, mesh, axes,
+                                         measure, local_budget):
+    """Prove the sharded probe path never round-trips gathered candidates
+    through HBM: no aval anywhere in the search jaxpr is a per-query
+    candidate tensor of ``nprobe*cap`` rows — the (qb, nprobe*cap, n) /
+    (qb, nprobe*cap) shapes a naive gather-then-GEMM scorer materializes.
+    The rank-scan scorer peaks at (qb, cap, n) per probe rank and the merge
+    tensors stay O(k)-wide, both strictly under the bound. Returns
+    (n_avals_scanned, offenders)."""
+    from repro import retrieval as rt
+
+    n = index.rows.shape[2]
+    cap = index.capacity
+    s = int(np.prod([mesh.shape[a] for a in axes]))
+    bound = nprobe * cap
+    if bound <= max(s * k, k + cap):
+        raise ValueError(  # merge widths would alias the candidate bound
+            f"materialization check is vacuous at nprobe*cap={bound} "
+            f"(merge widths {s * k}, {k + cap}); probe more cells")
+    fn = lambda ix, q: rt.search_sharded(ix, q, k, nprobe, mesh, axes,
+                                         measure, local_budget=local_budget)
+    jaxpr = jax.make_jaxpr(fn)(index, jnp.zeros((qb, n), jnp.float32))
+
+    seen, bad = [], []
+
+    def scan(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shp = getattr(v.aval, "shape", None) or ()
+                seen.append(shp)
+                if len(shp) >= 2 and shp[0] == qb and shp[1] >= bound:
+                    bad.append((eqn.primitive.name, shp))
+            for pv in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        pv, is_leaf=lambda x: hasattr(x, "jaxpr")
+                        or hasattr(x, "eqns")):
+                    ij = getattr(sub, "jaxpr", sub)
+                    if hasattr(ij, "eqns"):
+                        scan(ij)
+
+    scan(jaxpr.jaxpr)
+    return len(seen), bad
+
+
+def _ivf_probe_sample_sharded(index, sst, sharded_ids, n_live, rng, spec,
+                              args, mesh, axes):
+    """Sharded analogue of :func:`_ivf_probe_sample`: fresh logical query
+    ids, their representation rows gathered from the sharded layout, and the
+    full-probe (exact, bit-identical to single-device) reference."""
+    from repro import retrieval as rt
+
+    k = sst.state.graph.k
+    qids = rng.integers(0, n_live, min(args.batch, n_live)).astype(np.int32)
+    qrep = sst.state.representation[sharded_ids(qids)]
+    lq = jnp.asarray(qids)
+    ve, ie, _ = rt.search_sharded(index, qrep, k, index.n_clusters, mesh,
+                                  axes, spec.d2, self_ids=lq)
+    return lq, qrep, k, (ve, ie)
+
+
+def _ivf_probe_recall_sharded(index, probe, nprobe, measure, mesh, axes,
+                              local_budget):
+    """(recall@k, mean probed-cells/query) of the serving-nprobe sharded
+    search vs the wave's exact reference. ``probed`` counts cells actually
+    scored across the mesh — with a ``local_budget`` the router drops
+    overflow cells on hot shards, and this is where that shows up."""
+    from repro import retrieval as rt
+
+    qids, qrep, k, (ve, ie) = probe
+    va, ia, probed = rt.search_sharded(index, qrep, k, nprobe, mesh, axes,
+                                       measure, self_ids=qids,
+                                       local_budget=local_budget)
+    return float(rt.recall_at_k(ia, ie, va, ve)), float(jnp.mean(probed))
+
+
 def _serve_cf_lifecycle_sharded(args):
     """The lifecycle replay on a mesh: fit_distributed → ShardedLandmarkState
     serving → shard-local-append fold-in → monitor → distributed refresh →
@@ -773,11 +864,59 @@ def _serve_cf_lifecycle_sharded(args):
         m[:n] = id_shard * sst.capacity + id_slot
         return jnp.asarray(m)
 
+    # optional sharded-IVF retrieval sidecar: posting lists block-partitioned
+    # over the mesh cells, probes routed shard-local, results merged from
+    # (b, k) lists only (repro.retrieval.sharded; docs/retrieval.md). Lists
+    # store LOGICAL row ids — the reservoir's id space — so recall probes
+    # need no translation.
+    use_ivf = args.retrieval == "ivf"
+    index = retrieval = user_ivf = None
+    recalls = []
+    if use_ivf:
+        from repro import retrieval as rt
+
+        user_ivf = rt.IVFSpec(
+            n_clusters=args.clusters or None, nprobe=args.nprobe or None)
+
+        def resolve_serving_ivf(u):
+            cfg = rt.resolve_ivf_sharded(user_ivf, u, n_shards)
+            if args.smoke and not args.nprobe:
+                # same smoke-scale bump as the single-device replay: k is a
+                # big fraction of U, a quarter of the cells can't hold recall
+                cfg = dataclasses.replace(
+                    cfg, nprobe=max(cfg.nprobe, cfg.n_clusters // 2))
+            return cfg
+
+        def probe_budget(nprobe):
+            # bound per-shard tail work to ~2x the even split; at full probe
+            # search_sharded pins the budget to C/S regardless
+            return min(nprobe, max(1, 2 * (-(-nprobe // n_shards))))
+
+        retrieval = resolve_serving_ivf(args.users)
+        # build on the logical-order representation (fit output), place on
+        # the mesh — bitwise the same index a single device would build
+        index = rt.build_index_sharded(st.representation, retrieval, mesh,
+                                       axes, spec.d2)
+        print(f"retrieval: sharded ivf C={index.n_clusters} "
+              f"({index.n_clusters // n_shards} cells/shard) "
+              f"cap={index.capacity} nprobe={retrieval.nprobe} "
+              f"budget={probe_budget(retrieval.nprobe)}/shard")
+        # one-time proof: the probe path never materializes the gathered
+        # (qb, nprobe*cap, n) candidate tensor a naive scorer would build
+        ck_np = max(2, retrieval.nprobe)
+        n_avals, offenders = _ivf_retrieval_materialization_check(
+            index, args.batch, st.graph.k, ck_np, mesh, axes, spec.d2,
+            probe_budget(ck_np))
+        print(f"ivf serve-path check: {n_avals} avals scanned, "
+              f"{len(offenders)} candidate-tensor materializations")
+        assert not offenders, offenders
+
     base_cov = float(monitor.batch_coverage(
         shadow_st.representation, jnp.ones(args.users)))
     mon = monitor.init_monitor(rspec.reservoir, args.users, base_cov)
     pol = policy.PolicyState(generation=gen0)
-    manager = RefreshManager(ckpt_dir, spec, mesh=mesh, row_axes=axes)
+    manager = RefreshManager(ckpt_dir, spec, mesh=mesh, row_axes=axes,
+                             ivf=user_ivf if use_ivf else None)
     pending = None
     swap_wave = pre_post = None
     identical_waves = 0
@@ -850,6 +989,15 @@ def _serve_cf_lifecycle_sharded(args):
             mon = monitor.observe_fold_in(mon, rep_rows, jnp.int32(len(train)))
             mon = _offer_holdout(mon, rng, next(keyseq), start_logical,
                                  hrows, hcols, hvals, res_batch)
+            if use_ivf:
+                # plan replicated, scatter shard-local (append_sharded) —
+                # bit-equal to the single-device append on gathered arrays
+                index, _ = rt.ensure_index_capacity_sharded(
+                    index, len(train), mesh, axes)
+                index = rt.append_sharded(
+                    index, rep_rows,
+                    start_logical + jnp.arange(len(train)), mesh, axes,
+                    spec.d2, spill_choices=retrieval.spill_choices)
 
         # ---- drift detection + distributed refresh -------------------------
         snap = monitor.holdout_snapshot_sharded(mon, sst, id_map_arr())
@@ -872,7 +1020,10 @@ def _serve_cf_lifecycle_sharded(args):
             manager.join()
             done = manager.poll()
         if done is not None:
-            gen, st_new = done
+            if use_ivf:
+                gen, st_new, new_index = done  # mesh-placed, rebuilt in swap
+            else:
+                gen, st_new = done
             mae_pre = snap.mae
             snap_u = st_new.ratings.shape[0]
             cur_n = len(id_shard)
@@ -902,6 +1053,21 @@ def _serve_cf_lifecycle_sharded(args):
             caps_sh.add(sst.capacity)
             id_shard = np.concatenate([id_shard, fsh])
             id_slot = np.concatenate([id_slot, fsl])
+            if use_ivf:
+                # swap the index with its refreshed quantizer + append the
+                # rows folded while the refit ran, then drop any nprobe
+                # escalation back to the default budget
+                if len(delta):
+                    new_index, _ = rt.ensure_index_capacity_sharded(
+                        new_index, len(delta), mesh, axes)
+                    drep = sst.state.representation[
+                        jnp.asarray(fsh * sst.capacity + fsl)]
+                    new_index = rt.append_sharded(
+                        new_index, drep, snap_u + jnp.arange(len(delta)),
+                        mesh, axes, spec.d2,
+                        spill_choices=retrieval.spill_choices)
+                index = new_index
+                retrieval = resolve_serving_ivf(len(id_shard))
             # swap the shadow replica through ITS single-device fit
             bst = buckets.from_state(oracle, args.min_bucket, args.growth)
             bst = buckets.fold_in_rows(bst, delta, bq, spec,
@@ -921,6 +1087,48 @@ def _serve_cf_lifecycle_sharded(args):
                   f"serving uninterrupted) holdout MAE "
                   f"{mae_pre:.4f} -> {mae_post:.4f}")
 
+        ivf_note = ""
+        if use_ivf:
+            # cell-skew gate: drifted arrivals pile into cells the frozen
+            # quantizer doesn't cover; a breach re-cells the population in
+            # logical row order (bitwise the same rebuild on any mesh)
+            cskew = monitor.shard_skew(index.fill)
+            if policy.should_rebalance(pol, rspec, cskew):
+                retrieval = resolve_serving_ivf(len(id_shard))
+                rep_log = sst.state.representation[
+                    sharded_ids(np.arange(len(id_shard)))]
+                index = rt.build_index_sharded(rep_log, retrieval, mesh,
+                                               axes, spec.d2)
+                print(f"wave {wave}: ivf lists rebalanced (cell skew "
+                      f"{cskew:.2f} > {rspec.max_skew:.2f}) -> "
+                      f"C={index.n_clusters} cap={index.capacity}")
+                cskew = monitor.shard_skew(index.fill)
+            # probe retrieval health of the config the next wave serves —
+            # same SLO feedback loop as the single-device replay, but the
+            # probes route through the sharded posting lists and `probed`
+            # counts cells actually scored across the mesh
+            probe = _ivf_probe_sample_sharded(index, sst, sharded_ids,
+                                              len(id_shard), rng, spec,
+                                              args, mesh, axes)
+            rec, probed_q = _ivf_probe_recall_sharded(
+                index, probe, retrieval.nprobe, spec.d2, mesh, axes,
+                probe_budget(retrieval.nprobe))
+            while (rec < IVF_RECALL_SLO
+                   and retrieval.nprobe < index.n_clusters):
+                esc = min(index.n_clusters, max(retrieval.nprobe + 1,
+                                                (retrieval.nprobe * 3) // 2))
+                retrieval = dataclasses.replace(retrieval, nprobe=esc)
+                rec, probed_q = _ivf_probe_recall_sharded(
+                    index, probe, esc, spec.d2, mesh, axes,
+                    probe_budget(esc))
+                print(f"wave {wave}: ivf recall below SLO -> nprobe "
+                      f"escalated to {esc}/{index.n_clusters} "
+                      f"(recall {rec:.3f}, probed/q={probed_q:.1f})")
+            recalls.append(rec)
+            ivf_note = (f" | ivf recall@{sst.state.graph.k}={rec:.3f} "
+                        f"nprobe={retrieval.nprobe} probed/q={probed_q:.1f} "
+                        f"cellskew={cskew:.2f}")
+
         fills = np.asarray(sst.n_valid)
         # the proactive-rebalance gate rides the sharded snapshot's skew
         # signal; least-loaded placement keeps it quiet in steady state, so
@@ -933,6 +1141,7 @@ def _serve_cf_lifecycle_sharded(args):
               f"p95={t95:.2f}ms | mae={snap.mae:.4f} "
               f"cov={snap.coverage_ratio:.2f} fold={snap.foldin_frac:.2f} "
               f"skew={snap.shard_skew:.2f} | bit-identical: {bool(same)}"
+              + ivf_note
               + (" | shard skew breach: repack at next swap" if rebal else "")
               + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
 
@@ -961,6 +1170,16 @@ def _serve_cf_lifecycle_sharded(args):
             raise AssertionError(
                 "sharded smoke replay must exercise a distributed refresh; "
                 "tune --drift/--waves or the smoke RefreshSpec")
+    if use_ivf:
+        print(f"ivf retrieval (sharded): recall@k per wave "
+              f"{[f'{r:.3f}' for r in recalls]} (mean "
+              f"{np.mean(recalls):.3f}, SLO {IVF_RECALL_SLO}) ending at "
+              f"nprobe={retrieval.nprobe}/{index.n_clusters}")
+        if args.smoke:
+            assert np.mean(recalls) >= IVF_RECALL_SLO, (
+                f"sharded ivf smoke recall {np.mean(recalls):.3f} < "
+                f"{IVF_RECALL_SLO} — the probe router + escalation + "
+                "refresh rebuild failed to hold the SLO on the mesh")
     print("cf sharded lifecycle: done")
 
 
@@ -1033,11 +1252,16 @@ def main(argv=None):
                     "(0 = n_clusters/4; == n_clusters is exact)")
     ap.add_argument("--clusters", type=int, default=0,
                     help="retrieval=ivf: k-means cells (0 = ~sqrt(U))")
+    ap.add_argument("--early-exit", action="store_true",
+                    help="retrieval=ivf: per-query adaptive probing — a "
+                    "query stops once its top-k survived `patience` further "
+                    "cells; wave stats report probed-cells/query "
+                    "(docs/retrieval.md)")
     args = ap.parse_args(argv)
-    if args.retrieval == "ivf" and (not args.lifecycle or args.mesh):
-        raise SystemExit("--retrieval ivf runs on the single-device "
-                         "lifecycle replay (--workload cf --lifecycle, no "
-                         "--mesh); the sharded IVF path is a ROADMAP item")
+    if args.retrieval == "ivf" and not args.lifecycle:
+        raise SystemExit("--retrieval ivf runs on the lifecycle replay "
+                         "(--workload cf --lifecycle); add --mesh to route "
+                         "probes through the sharded posting lists")
     if args.mesh:
         # must precede first backend use: force a host-platform device count
         # big enough for the mesh (no-op when XLA_FLAGS already forces one)

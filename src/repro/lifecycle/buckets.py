@@ -296,11 +296,17 @@ def from_state_sharded(state: LandmarkState, mesh, row_axes=("pod", "data"),
 def ensure_capacity_sharded(sstate, target: int, incoming: int,
                             min_bucket: int = 32,
                             growth: float = DEFAULT_GROWTH):
-    """Host-side growth check before a sharded fold-in of ``incoming`` rows
-    onto shard ``target``. When the target block overflows, EVERY shard block
-    is re-padded to the next capacity on the schedule and graph ids are
-    remapped (one deliberate recompile, same as the single-device schedule).
-    Returns ``(sstate, grew)``.
+    """Growth check before a sharded fold-in of ``incoming`` rows onto shard
+    ``target``. When the target block overflows, EVERY shard block is
+    re-padded to the next capacity on the schedule and graph ids are remapped
+    (one deliberate recompile, same as the single-device schedule). Returns
+    ``(sstate, grew)``.
+
+    The overflow decision reads one host scalar (the target shard's fill);
+    the repack itself is pure-device — ``repack_row_blocks_device`` pads each
+    shard block in place and ``remap_block_ids`` is plain array arithmetic,
+    so a pod-sized regrow never round-trips the (S*C, ...) payload through
+    host memory.
     """
     import numpy as np
 
@@ -316,21 +322,17 @@ def ensure_capacity_sharded(sstate, target: int, incoming: int,
                               growth)
     st = sstate.state
     graph = st.graph.to_full() if st.graph.is_compact else st.graph
-    repack = lambda x: shd.repack_row_blocks(np.asarray(x), s, cap, new_cap)
-    row_sh = shd.cf_row_sharding(sstate.mesh, sstate.axes)
-    rep = jax.device_put(repack(st.representation), row_sh)
-    ratings = jax.device_put(repack(st.ratings), row_sh)
-    gi = jax.device_put(
-        repack(shd.remap_block_ids(np.asarray(graph.indices), cap, new_cap)),
-        row_sh)
-    gw = jax.device_put(repack(graph.weights), row_sh)
+    repack = lambda x: shd.repack_row_blocks_device(
+        x, s, cap, new_cap, sstate.mesh, sstate.axes)
+    rep = repack(st.representation)
+    ratings = repack(st.ratings)
+    gi = repack(shd.remap_block_ids(graph.indices, cap, new_cap))
+    gw = repack(graph.weights)
     repl = jax.sharding.NamedSharding(sstate.mesh,
                                       jax.sharding.PartitionSpec())
     idx = jax.device_put(
-        shd.remap_block_ids(np.asarray(st.landmark_idx), cap, new_cap), repl)
-    rank = jax.device_put(repack(sstate.row_rank),
-                          shd.cf_row_sharding(sstate.mesh, sstate.axes,
-                                              ndim=1))
+        shd.remap_block_ids(st.landmark_idx, cap, new_cap), repl)
+    rank = repack(sstate.row_rank)
     return ShardedLandmarkState(
         LandmarkState(idx, rep, ratings, graph=NeighborGraph(gi, gw)),
         sstate.n_valid, rank, sstate.mesh, sstate.axes), True

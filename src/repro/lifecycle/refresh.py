@@ -57,7 +57,9 @@ class RefreshManager:
     ``(generation, state, index)`` 3-tuples; the rebuild is keyed
     ``PRNGKey(ivf.seed)`` so a swap's index is reproducible from its
     checkpoint. The index itself is derived data (rebuildable from the
-    artifact in one call), so it is not checkpointed.
+    artifact in one call), so it is not checkpointed. Combined with
+    ``mesh``, the spec resolves through ``resolve_ivf_sharded`` and the
+    returned index arrives already mesh-placed (``retrieval.shard_index``).
     """
 
     def __init__(self, ckpt_dir: str, spec: LandmarkSpec, *,
@@ -116,11 +118,28 @@ class RefreshManager:
                     # rebuild the retrieval index on the refreshed embedding:
                     # centroids move with the landmarks, inside the same
                     # background swap, so serving never probes a stale
-                    # quantizer against a new representation
+                    # quantizer against a new representation. With a mesh the
+                    # cell count is rounded to the shard count and the posting
+                    # blocks land row-sharded (retrieval.sharded) — the build
+                    # itself is the same global quantizer either way.
                     from repro.retrieval import build_index, resolve_ivf
 
-                    cfg = resolve_ivf(self.ivf, st.representation.shape[0])
-                    index = build_index(st.representation, cfg, self.spec.d2)
+                    u = st.representation.shape[0]
+                    if self.mesh is not None:
+                        from repro.distributed import sharding as shd
+                        from repro.retrieval import (resolve_ivf_sharded,
+                                                     shard_index)
+
+                        axes = shd.cf_row_axes(self.mesh, self.row_axes)
+                        cfg = resolve_ivf_sharded(
+                            self.ivf, u, shd.cf_shard_count(self.mesh, axes))
+                        index = shard_index(
+                            build_index(st.representation, cfg, self.spec.d2),
+                            self.mesh, axes)
+                    else:
+                        cfg = resolve_ivf(self.ivf, u)
+                        index = build_index(st.representation, cfg,
+                                            self.spec.d2)
                     jax.block_until_ready(index.lists)
                     result = (generation, st, index)
                 else:

@@ -8,6 +8,12 @@ only the ``nprobe`` nearest cells per query — O((U/C)·nprobe·n) instead of
 O(U·n), with an exact-by-construction fallback at ``nprobe == n_clusters``
 that is bit-identical to the streaming graph backend.
 
+Posting payloads can be stored quantized (``IVFSpec.payload_dtype`` in
+{"f32", "bf16", "int8"}) and are dequantized at score time; ``sharded``
+block-partitions the posting lists over a mesh with a probe-routed
+``search_sharded`` whose request path moves only (b, k) merged results.
+``search_early_exit`` stops probing a query once its top-k stabilizes.
+
 Consumed by ``core.graph`` (``backend="ivf"``), the serve fold-in
 (``core.fold_in(..., ivf_index=...)``), the lifecycle refresh (index rebuilt
 inside the generation-stamped swap) and ``launch/serve.py --retrieval ivf``.
@@ -18,27 +24,49 @@ from .index import (
     IVFSpec,
     append,
     build_index,
+    dequantize_payload,
     ensure_index_capacity,
     grow_capacity,
+    place_plan,
+    quantize_payload,
     recall_at_k,
     resolve_ivf,
     score_candidates_kernel,
     search,
+    search_early_exit,
 )
 from .kmeans import assign_clusters, assign_clusters_kernel, kmeans
+from .sharded import (
+    append_sharded,
+    build_index_sharded,
+    ensure_index_capacity_sharded,
+    resolve_ivf_sharded,
+    search_sharded,
+    shard_index,
+)
 
 __all__ = [
     "IVFIndex",
     "IVFSpec",
     "append",
+    "append_sharded",
     "assign_clusters",
     "assign_clusters_kernel",
     "build_index",
+    "build_index_sharded",
+    "dequantize_payload",
     "ensure_index_capacity",
+    "ensure_index_capacity_sharded",
     "grow_capacity",
     "kmeans",
+    "place_plan",
+    "quantize_payload",
     "recall_at_k",
     "resolve_ivf",
+    "resolve_ivf_sharded",
     "score_candidates_kernel",
     "search",
+    "search_early_exit",
+    "search_sharded",
+    "shard_index",
 ]

@@ -38,6 +38,26 @@ differ, scores come from an m-invariant multiply-reduce (or the skinny Pallas
 scorer on TPU), and recall@k vs the exact path is the quality metric —
 monotonically non-decreasing in ``nprobe`` (candidate sets are nested,
 property-tested in tests/test_properties.py).
+
+Scorers: ``jnp`` (the multiply-reduce above), ``pallas`` (the skinny
+per-query tile kernel), and ``fused`` — the one-pass probe kernel in
+``repro.kernels.ivf_probe`` that gathers posting-list blocks, scores them
+under the d2 measure and maintains the top-k entirely in VMEM, so the
+``(qb, nprobe·cap, n)`` candidate tensor of the slice+GEMM path never
+round-trips through HBM. The fused scorer handles *every* nprobe including
+full probe, where it is bit-identical to the GEMM reference (the in-kernel
+(value desc, id asc) tie handling reproduces the id-sorted ``lax.top_k``
+canonicalization). ``auto`` resolves to ``fused`` on TPU, ``jnp`` elsewhere.
+
+Payload quantization: ``IVFSpec.payload_dtype`` selects how the posting-list
+vector payloads are *stored* — ``f32`` (exact, the default), ``bf16``, or
+``int8`` with one f32 scale per row (``scale = max|row|/127``, the
+post-training-quantization idiom) carried in the optional ``IVFIndex.scale``
+sidecar. Ids, fills and centroids stay full precision, placement is computed
+from the unquantized rows, and scoring dequantizes after the gather — so
+quantization trades *recall for bandwidth* at fixed nprobe and leaves the
+f32 exactness contract untouched (measured in benchmarks.run
+``ivf_payload_quantization``; bounded in tests/test_properties.py).
 """
 from __future__ import annotations
 
@@ -48,7 +68,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.similarity import EPS, dense_similarity
@@ -56,7 +75,8 @@ from repro.core.types import round_up
 
 from .kmeans import kmeans
 
-SCORERS = ("jnp", "pallas", "auto")
+SCORERS = ("jnp", "pallas", "fused", "auto")
+PAYLOAD_DTYPES = ("f32", "bf16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +87,9 @@ class IVFSpec:
     (:func:`resolve_ivf`: C ≈ √U, nprobe ≈ C/4). ``slack`` sizes the posting
     lists (cap = ⌈U·slack/C⌉, rounded to 8) so moderate cluster skew fits
     without spilling; ``seed`` keys the k-means init so rebuilds are
-    deterministic per generation.
+    deterministic per generation. ``payload_dtype`` selects the stored
+    posting-list payload precision (module docstring): f32 keeps the
+    exactness contract, bf16/int8 trade recall for memory bandwidth.
     """
 
     n_clusters: Optional[int] = None
@@ -79,6 +101,7 @@ class IVFSpec:
     #                         spill unreachable, the recall-safe default)
     seed: int = 0
     assign_backend: str = "auto"  # kmeans assignment: jnp|pallas|auto
+    payload_dtype: str = "f32"  # stored payload rows: f32|bf16|int8
 
 
 def resolve_ivf(spec: Optional[IVFSpec], u: int) -> IVFSpec:
@@ -106,18 +129,22 @@ class IVFIndex:
     ``rows`` carries each member's (n,) landmark vector *inside* its posting
     list (classic inverted-file layout): probing a cell is then one
     contiguous (cap, n) slice instead of ``cap`` scattered row gathers —
-    on CPU that gather was the dominant cost of the whole search. The
-    payloads are bit-copies of the rep rows written at build/append time, so
-    scores computed from them equal scores computed from ``rep``.
+    on CPU that gather was the dominant cost of the whole search. At the
+    default ``payload_dtype="f32"`` the payloads are bit-copies of the rep
+    rows written at build/append time, so scores computed from them equal
+    scores computed from ``rep``; bf16/int8 payloads store a rounded copy
+    (int8 with a per-row f32 ``scale`` sidecar) and dequantize at scoring.
     """
 
     centroids: jax.Array  # (C, n) f32 coarse quantizer
     lists: jax.Array  # (C, cap) int32 member row ids (uint16 when compact)
-    rows: jax.Array  # (C, cap, n) f32 member landmark vectors, same slots
+    rows: jax.Array  # (C, cap, n) member landmark vectors (f32|bf16|int8)
     fill: jax.Array  # (C,) int32 live entries per list
+    scale: Optional[jax.Array] = None  # (C, cap) f32 int8 dequant scales
 
     def tree_flatten(self):
-        return (self.centroids, self.lists, self.rows, self.fill), ()
+        return (self.centroids, self.lists, self.rows, self.fill,
+                self.scale), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -126,6 +153,14 @@ class IVFIndex:
     @property
     def n_clusters(self) -> int:
         return self.centroids.shape[0]
+
+    @property
+    def payload_dtype(self) -> str:
+        """Stored payload precision, recovered from the arrays themselves
+        (appends must quantize with whatever the index was built with)."""
+        if self.rows.dtype == jnp.int8:
+            return "int8"
+        return "bf16" if self.rows.dtype == jnp.bfloat16 else "f32"
 
     @property
     def capacity(self) -> int:
@@ -146,38 +181,71 @@ class IVFIndex:
             raise ValueError(
                 f"compact posting lists are uint16: max id {top} exceeds 65535")
         return IVFIndex(self.centroids, self.lists.astype(jnp.uint16),
-                        self.rows, self.fill)
+                        self.rows, self.fill, self.scale)
 
     def to_full(self) -> "IVFIndex":
         return IVFIndex(self.centroids, self.lists.astype(jnp.int32),
-                        self.rows, self.fill)
+                        self.rows, self.fill, self.scale)
+
+
+# ------------------------------------------------------- payload quantization
+def quantize_payload(payload: jax.Array, payload_dtype: str
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """(B, n) f32 rows -> (stored rows, per-row scales or None).
+
+    int8 uses symmetric per-row scaling (``scale = max|row|/127``, the
+    standard post-training-quantization recipe): ids/weights stay f32, only
+    the gathered payload bandwidth shrinks 4x. A zero row quantizes to zeros
+    with scale 0 — dequantizing reproduces it exactly.
+    """
+    if payload_dtype == "f32":
+        return payload, None
+    if payload_dtype == "bf16":
+        return payload.astype(jnp.bfloat16), None
+    if payload_dtype == "int8":
+        scale = jnp.max(jnp.abs(payload), axis=-1) / 127.0  # (B,)
+        q = jnp.round(payload / jnp.maximum(scale, EPS)[..., None])
+        return q.astype(jnp.int8), scale.astype(jnp.float32)
+    raise ValueError(
+        f"unknown payload_dtype {payload_dtype!r}; expected {PAYLOAD_DTYPES}")
+
+
+def dequantize_payload(stored: jax.Array, scale: Optional[jax.Array]
+                       ) -> jax.Array:
+    """Inverse of :func:`quantize_payload` — identity (not a copy) on f32, so
+    the exactness contract of the default payload survives this call site."""
+    if stored.dtype == jnp.float32 and scale is None:
+        return stored
+    x = stored.astype(jnp.float32)
+    return x * scale[..., None] if scale is not None else x
 
 
 # ------------------------------------------------------------- list packing
-def _scatter_entries(lists, rows, ids, payload, dest_c, dest_s, ok, c):
-    """Write (id, vector) pairs at (dest_c, dest_s); ``ok=False`` drops."""
+def _scatter_entries(lists, rows, scale, ids, payload, pscale,
+                     dest_c, dest_s, ok, c):
+    """Write (id, vector[, scale]) tuples at (dest_c, dest_s); ``ok=False``
+    drops (the dump cell ``c`` is out of bounds, ``mode="drop"``)."""
     cc = jnp.where(ok, dest_c, c)
     ss = jnp.where(ok, dest_s, 0)
     lists = lists.at[cc, ss].set(ids, mode="drop")
-    rows = rows.at[cc, ss].set(payload, mode="drop")
-    return lists, rows
+    rows = rows.at[cc, ss].set(payload.astype(rows.dtype), mode="drop")
+    if scale is not None:
+        scale = scale.at[cc, ss].set(pscale, mode="drop")
+    return lists, rows, scale
 
 
-def _place_round(
-    lists: jax.Array,  # (C, cap) int32
-    rows: jax.Array,  # (C, cap, n) f32 member vectors
+def _place_round_plan(
     fill: jax.Array,  # (C,) int32
-    ids: jax.Array,  # (B,) int32 row ids, in arrival order
-    payload: jax.Array,  # (B, n) the rows' landmark vectors
     clusters: jax.Array,  # (B,) int32 target list per id for this round
     todo: jax.Array,  # (B,) bool rows still unplaced
+    c: int,
+    cap: int,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One placement round: rows land at ``fill[c] + rank`` of their target
-    list (rank = arrival order within the batch's same-list group, via one
-    stable sort); rows that would cross ``cap`` stay unplaced. Returns
-    ``(lists, rows, fill, placed)`` with ``placed`` in batch order."""
-    c, cap = lists.shape
-    b = ids.shape[0]
+    """One placement round, destinations only: rows land at ``fill[c]+rank``
+    of their target list (rank = arrival order within the batch's same-list
+    group, via one stable sort); rows that would cross ``cap`` stay unplaced.
+    Returns ``(fill, dest_c, dest_s, placed)``, all in batch order."""
+    b = clusters.shape[0]
     key = jnp.where(todo, clusters, c)  # settled rows sort to the end
     order = jnp.argsort(key)  # stable: batch order within each list group
     sc = key[order]
@@ -185,25 +253,25 @@ def _place_round(
     scl = jnp.clip(sc, 0, c - 1)
     desired = fill[scl] + rank
     fits = todo[order] & (sc < c) & (desired < cap)
-    lists, rows = _scatter_entries(lists, rows, ids[order], payload[order],
-                                   scl, desired, fits, c)
     fill = fill + jax.ops.segment_sum(
         fits.astype(jnp.int32), jnp.where(fits, scl, c),
         num_segments=c + 1)[:-1]
+    dest_c = jnp.zeros((b,), jnp.int32).at[order].set(scl)
+    dest_s = jnp.zeros((b,), jnp.int32).at[order].set(
+        desired.astype(jnp.int32))
     placed = jnp.zeros((b,), bool).at[order].set(fits)
-    return lists, rows, fill, placed
+    return fill, dest_c, dest_s, placed
 
 
-def _spill_free_slots(lists, rows, fill, ids, payload, todo):
-    """Last-resort placement: the m-th leftover row takes the m-th free slot
-    in (list-major, slot) order. Costs recall (the row sits in an unrelated
-    cell), never correctness — nothing valid is dropped while
+def _spill_plan(fill, todo, c, cap):
+    """Last-resort destinations: the m-th leftover row takes the m-th free
+    slot in (list-major, slot) order. Costs recall (the row sits in an
+    unrelated cell), never correctness — nothing valid is dropped while
     ``sum(fill) + batch <= C*cap``, the invariant exactness rests on.
     Beyond that bound there is nowhere left to write and leftover rows ARE
     silently dropped (this runs under jit — it cannot raise): callers must
     reserve room first, via :func:`ensure_index_capacity` (host) or
     :func:`grow_capacity` (traced, static shapes)."""
-    c, cap = lists.shape
     m_rank = jnp.cumsum(todo.astype(jnp.int32)) - 1
     free = cap - fill  # (C,)
     fstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
@@ -212,24 +280,28 @@ def _spill_free_slots(lists, rows, fill, ids, payload, todo):
                       0, c - 1)
     dest_s = fill[dest_c] + (m_rank - fstart[dest_c])
     ok = todo & (m_rank < fstart[-1])
-    lists, rows = _scatter_entries(lists, rows, ids, payload,
-                                   dest_c, dest_s, ok, c)
     fill = fill + jax.ops.segment_sum(
         ok.astype(jnp.int32), jnp.where(ok, dest_c, c),
         num_segments=c + 1)[:-1]
-    return lists, rows, fill
+    return fill, dest_c, dest_s, ok
 
 
-def _place(
-    lists: jax.Array,  # (C, cap) int32
-    rows: jax.Array,  # (C, cap, n) f32
+def place_plan(
     fill: jax.Array,  # (C,) int32
-    ids: jax.Array,  # (B,) int32 row ids to insert, in arrival order
-    payload: jax.Array,  # (B, n) their landmark vectors
     choices: jax.Array,  # (B, T) preferred lists per id, best first
     valid: jax.Array,  # (B,) bool; invalid entries are dropped
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Scatter a batch into the posting lists — all traced, nothing dropped.
+    cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pure placement *plan*: ``(dest_c, dest_s, ok, new_fill)`` per batch row.
+
+    Destinations depend only on ``(fill, choices, valid)`` — never on the
+    list/row contents — so the plan can be computed once (replicated, on the
+    sharded index) and applied anywhere: :func:`_place` applies it to the
+    whole index, ``sharded.append_sharded`` applies the shard-local subset.
+    Every (dest_c, dest_s) pair is written at most once (round r+1 lands
+    strictly above round r's post-update fill), which is what lets the apply
+    side collapse all rounds into a single scatter, bit-equal to the
+    round-by-round scatters this replaced.
 
     Each row tries its T nearest cells in order (round r places everyone
     still homeless into choice r), so overflow from a hot cell lands in the
@@ -242,19 +314,49 @@ def _place(
     piles arrivals into a corner of the embedding. The round loop is a
     ``fori_loop`` so deep preference orders cost trace size O(1).
     """
+    b = choices.shape[0]
+    c = fill.shape[0]
     placed = ~valid  # invalid rows: pretend placed (== dropped)
+    dest_c = jnp.zeros((b,), jnp.int32)
+    dest_s = jnp.zeros((b,), jnp.int32)
+    ok_any = jnp.zeros((b,), bool)
 
     def round_(r, carry):
-        lists, rows, fill, placed = carry
-        lists, rows, fill, ok = _place_round(
-            lists, rows, fill, ids, payload,
+        fill, placed, dest_c, dest_s, ok_any = carry
+        fill, dc, ds, ok = _place_round_plan(
+            fill,
             jax.lax.dynamic_index_in_dim(choices, r, axis=1, keepdims=False),
-            ~placed)
-        return lists, rows, fill, placed | ok
+            ~placed, c, cap)
+        dest_c = jnp.where(ok, dc, dest_c)
+        dest_s = jnp.where(ok, ds, dest_s)
+        return fill, placed | ok, dest_c, dest_s, ok_any | ok
 
-    lists, rows, fill, placed = jax.lax.fori_loop(
-        0, choices.shape[1], round_, (lists, rows, fill, placed))
-    return _spill_free_slots(lists, rows, fill, ids, payload, ~placed)
+    fill, placed, dest_c, dest_s, ok_any = jax.lax.fori_loop(
+        0, choices.shape[1], round_, (fill, placed, dest_c, dest_s, ok_any))
+    fill, dc, ds, ok = _spill_plan(fill, ~placed, c, cap)
+    dest_c = jnp.where(ok, dc, dest_c)
+    dest_s = jnp.where(ok, ds.astype(jnp.int32), dest_s)
+    return dest_c, dest_s, ok_any | ok, fill
+
+
+def _place(
+    lists: jax.Array,  # (C, cap) int32
+    rows: jax.Array,  # (C, cap, n) stored payload dtype
+    scale: Optional[jax.Array],  # (C, cap) f32 or None
+    fill: jax.Array,  # (C,) int32
+    ids: jax.Array,  # (B,) int32 row ids to insert, in arrival order
+    payload: jax.Array,  # (B, n) their (already quantized) vectors
+    pscale: Optional[jax.Array],  # (B,) payload scales or None
+    choices: jax.Array,  # (B, T) preferred lists per id, best first
+    valid: jax.Array,  # (B,) bool; invalid entries are dropped
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array]:
+    """Plan + apply: scatter a batch into the posting lists (see
+    :func:`place_plan` for the placement semantics)."""
+    c, cap = lists.shape
+    dest_c, dest_s, ok, new_fill = place_plan(fill, choices, valid, cap)
+    lists, rows, scale = _scatter_entries(
+        lists, rows, scale, ids, payload, pscale, dest_c, dest_s, ok, c)
+    return lists, rows, scale, new_fill
 
 
 def _list_choices(rep: jax.Array, centroids: jax.Array, measure: str,
@@ -294,13 +396,16 @@ def build_index(
     valid = (jnp.arange(u) < n_valid) if n_valid is not None \
         else jnp.ones((u,), bool)
     choices = _list_choices(rep, cent, measure, spec.spill_choices)
+    payload, pscale = quantize_payload(rep.astype(jnp.float32),
+                                       spec.payload_dtype)
     lists = jnp.zeros((c, cap), jnp.int32)
-    rows = jnp.zeros((c, cap, rep.shape[1]), jnp.float32)
+    rows = jnp.zeros((c, cap, rep.shape[1]), payload.dtype)
+    scale = None if pscale is None else jnp.zeros((c, cap), jnp.float32)
     fill = jnp.zeros((c,), jnp.int32)
-    lists, rows, fill = _place(lists, rows, fill,
-                               jnp.arange(u, dtype=jnp.int32),
-                               rep.astype(jnp.float32), choices, valid)
-    return IVFIndex(cent, lists, rows, fill)
+    lists, rows, scale, fill = _place(lists, rows, scale, fill,
+                                      jnp.arange(u, dtype=jnp.int32),
+                                      payload, pscale, choices, valid)
+    return IVFIndex(cent, lists, rows, fill, scale)
 
 
 @functools.partial(jax.jit, static_argnames=("measure", "spill_choices"))
@@ -330,10 +435,12 @@ def append(
         else jnp.ones((b,), bool)
     t = index.n_clusters if spill_choices <= 0 else spill_choices
     choices = _list_choices(new_rep, index.centroids, measure, t)
-    lists, rows, fill = _place(index.lists, index.rows, index.fill,
-                               new_ids.astype(jnp.int32),
-                               new_rep.astype(jnp.float32), choices, valid)
-    return IVFIndex(index.centroids, lists, rows, fill)
+    payload, pscale = quantize_payload(new_rep.astype(jnp.float32),
+                                       index.payload_dtype)
+    lists, rows, scale, fill = _place(
+        index.lists, index.rows, index.scale, index.fill,
+        new_ids.astype(jnp.int32), payload, pscale, choices, valid)
+    return IVFIndex(index.centroids, lists, rows, fill, scale)
 
 
 def grow_capacity(index: IVFIndex, new_cap: int) -> IVFIndex:
@@ -348,29 +455,29 @@ def grow_capacity(index: IVFIndex, new_cap: int) -> IVFIndex:
     return IVFIndex(index.centroids,
                     jnp.pad(index.lists, ((0, 0), (0, pad))),
                     jnp.pad(index.rows, ((0, 0), (0, pad), (0, 0))),
-                    index.fill)
+                    index.fill,
+                    None if index.scale is None
+                    else jnp.pad(index.scale, ((0, 0), (0, pad))))
 
 
 def ensure_index_capacity(index: IVFIndex, incoming: int,
                           slack: float = 1.25) -> Tuple[IVFIndex, bool]:
-    """Host-side growth check before an append of ``incoming`` rows.
+    """Growth check before an append of ``incoming`` rows.
 
     Regrows ``cap`` when the fullest list could overflow (worst case: the
     whole batch lands in one cell), so appends stay spill-free in steady
     state. Returns ``(index, grew)`` — the one deliberate recompile, exactly
-    like ``buckets.ensure_capacity``.
+    like ``buckets.ensure_capacity``. The decision reads one device scalar
+    (``max(fill)``); the repack itself is :func:`grow_capacity`'s pure-device
+    pad — the posting payload never round-trips through host memory, so the
+    cost is one device copy even at million-user index sizes.
     """
     idx = index.to_full() if index.is_compact else index
-    top = int(np.asarray(idx.fill).max()) if idx.n_clusters else 0
+    top = int(jax.device_get(jnp.max(idx.fill))) if idx.n_clusters else 0
     if top + incoming <= idx.capacity:
         return index, False
     new_cap = round_up(max(int((top + incoming) * slack), top + incoming), 8)
-    lists = np.zeros((idx.n_clusters, new_cap), np.int32)
-    lists[:, :idx.capacity] = np.asarray(idx.lists)
-    rows = np.zeros((idx.n_clusters, new_cap, idx.rows.shape[2]), np.float32)
-    rows[:, :idx.capacity] = np.asarray(idx.rows)
-    return IVFIndex(idx.centroids, jnp.asarray(lists), jnp.asarray(rows),
-                    idx.fill), True
+    return grow_capacity(idx, new_cap), True
 
 
 # ------------------------------------------------------------------ search
@@ -474,7 +581,7 @@ def _padded_topk(vals: jax.Array, ids: jax.Array, k: int
 
 def resolve_scorer(scorer: str) -> str:
     if scorer == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return "fused" if jax.default_backend() == "tpu" else "jnp"
     if scorer not in SCORERS:
         raise ValueError(f"unknown scorer {scorer!r}; expected {SCORERS}")
     return scorer
@@ -524,6 +631,21 @@ def search(
         sids = sids.at[:b].set(self_ids.astype(jnp.int32))
     slot = jnp.arange(cap)
 
+    if resolve_scorer(scorer) == "fused":
+        # one-pass probe kernel: gather + score + top-k in VMEM, the
+        # (b, nprobe*cap, n) candidate tensor never exists in HBM. Handles
+        # every nprobe; at full probe the in-kernel (value desc, id asc)
+        # canonical tie-break makes it bit-identical to the GEMM path below
+        # (acceptance-tested in tests/test_ivf_fused.py).
+        from repro.kernels.ivf_probe import fused_probe_topk
+
+        csims = dense_similarity(q, index.centroids, measure)
+        _, probe = jax.lax.top_k(csims, nprobe)
+        vals, ids = fused_probe_topk(
+            q, probe.astype(jnp.int32), index.lists, index.rows, index.scale,
+            index.fill, k=k, measure=measure, self_ids=sids)
+        return vals[:b], ids[:b]
+
     if nprobe >= c:
         # exact path: every cell probed -> one shared candidate matrix, one
         # GEMM per query block (bitwise == the streaming chunk scan; the
@@ -532,7 +654,9 @@ def search(
         fvalid = (slot[None, :] < index.fill[:, None]).reshape(-1)
         order = jnp.argsort(jnp.where(fvalid, flat, jnp.int32(2**31 - 1)))
         flat, fvalid = flat[order], fvalid[order]
-        cmat = index.rows.reshape(c * cap, n)[order]
+        cmat = dequantize_payload(
+            index.rows.reshape(c * cap, n)[order],
+            None if index.scale is None else index.scale.reshape(-1)[order])
 
         def block(args):
             qq, ss = args  # (qb, n), (qb,)
@@ -552,7 +676,10 @@ def search(
         def block(args):
             qq, pr, ss = args  # (qb, n) (qb, nprobe) (qb,)
             # contiguous (cap, n) slices per probed cell — cheap gather
-            rows = index.rows[pr].reshape(-1, m, n)
+            rows = dequantize_payload(
+                index.rows[pr].reshape(-1, m, n),
+                None if index.scale is None
+                else index.scale[pr].reshape(-1, m))
             cc = index.lists[pr].astype(jnp.int32).reshape(-1, m)
             vv = (slot[None, None, :] < index.fill[pr][..., None]
                   ).reshape(-1, m)
@@ -565,6 +692,79 @@ def search(
             block, (q.reshape(-1, qb, n), probe.reshape(-1, qb, nprobe),
                     sids.reshape(-1, qb)))
     return (vals.reshape(b_pad, k)[:b], ids.reshape(b_pad, k)[:b])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nprobe", "measure", "patience"))
+def search_early_exit(
+    index: IVFIndex,
+    queries: jax.Array,  # (b, n)
+    k: int,
+    nprobe: int,
+    measure: str = "cosine",
+    *,
+    self_ids: Optional[jax.Array] = None,
+    patience: int = 2,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-query early-terminated probe: Lucene-style adaptive traversal.
+
+    Cells are visited in probe-preference order (nearest centroid first);
+    a query stops scoring further cells once its running top-k has been
+    *stable* — unchanged by a scored cell — for ``patience`` consecutive
+    cells. ``nprobe`` stays the hard budget/upper bound; early exit only
+    spends less. Returns ``(vals, ids, probed)`` with ``probed`` (b,) int32 =
+    cells actually scored per query, the wave-stats bandwidth metric.
+
+    Compute note: under jit every query still *traces* nprobe steps (shapes
+    are static), but an inactive query's cell gather is scored against a
+    fully masked sim row and its best list provably cannot change — the
+    measured win is the probed-cells/query ledger that lets the serving loop
+    cap nprobe escalation (see ``launch/serve.py --early-exit``), and on the
+    sharded router fewer live cells per query means fewer shards touched.
+    Results match plain ``search`` whenever no query exits early (the merge
+    is the same candidate stream in the same (probe rank, slot) order);
+    early-exited queries trade recall exactly like a smaller nprobe would.
+    """
+    if index.is_compact:
+        index = index.to_full()
+    c, cap = index.n_clusters, index.capacity
+    nprobe = min(max(nprobe, 1), c)
+    patience = max(int(patience), 1)
+    b = queries.shape[0]
+    q = queries.astype(jnp.float32)
+    sids = (self_ids.astype(jnp.int32) if self_ids is not None
+            else jnp.full((b,), -1, jnp.int32))
+    csims = dense_similarity(q, index.centroids, measure)
+    _, probe = jax.lax.top_k(csims, nprobe)  # (b, nprobe)
+    slot = jnp.arange(cap)
+
+    def step(carry, pr):  # pr: (b,) cell of each query at this probe rank
+        vals, ids, stable, probed, active = carry
+        rows = dequantize_payload(
+            index.rows[pr],  # (b, cap, n)
+            None if index.scale is None else index.scale[pr])
+        cc = index.lists[pr].astype(jnp.int32)  # (b, cap)
+        live = slot[None, :] < index.fill[pr][:, None]
+        sims = _gathered_sims(q, rows, measure)
+        sims = jnp.where(~live | (cc == sids[:, None]) | ~active[:, None],
+                         -jnp.inf, sims)
+        # merge: best list first, so positional tie-break keeps incumbents
+        # and an all-masked row (inactive query) is a bitwise no-op.
+        mv, mi = _padded_topk(jnp.concatenate([vals, sims], axis=1),
+                              jnp.concatenate([ids, cc], axis=1), k)
+        changed = jnp.any((mv != vals) | (mi != ids), axis=1)
+        stable = jnp.where(changed, 0, stable + 1)
+        probed = probed + active.astype(jnp.int32)
+        active = active & (stable < patience)
+        return (mv, mi, stable, probed, active), None
+
+    init = (jnp.full((b, k), -jnp.inf),
+            jnp.zeros((b, k), jnp.int32),
+            jnp.zeros((b,), jnp.int32),
+            jnp.zeros((b,), jnp.int32),
+            jnp.ones((b,), bool))
+    (vals, ids, _, probed, _), _ = jax.lax.scan(step, init, probe.T)
+    return vals, ids, probed
 
 
 def recall_at_k(got_ids: jax.Array, want_ids: jax.Array,

@@ -1,0 +1,120 @@
+"""Fused Pallas probe kernel vs the slice+GEMM reference (interpret mode).
+
+The acceptance bar of the fused path: at full probe it must be
+*bit-identical* to the exact slice+GEMM search on every d2 measure — same
+bar ``test_retrieval.test_full_probe_search_bitwise_equals_streaming`` holds
+the GEMM path to vs the streaming scan, so the chain fused == GEMM ==
+streaming is closed by construction. Comparisons go through
+``finalize_topk`` (the canonical (weight, id) normalization every consumer
+applies; empty -inf slots carry arbitrary ids in the raw GEMM output).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.graph import finalize_topk  # noqa: E402
+from repro.kernels.ivf_probe import fused_probe_topk  # noqa: E402
+from repro.retrieval.index import (  # noqa: E402
+    IVFSpec, build_index, recall_at_k, resolve_ivf, search)
+
+MEASURES = ("cosine", "pearson", "euclidean")
+
+
+def _mk(u=300, n=16, c=12, seed=0, measure="cosine", payload_dtype="f32"):
+    rep = jax.random.normal(jax.random.PRNGKey(seed), (u, n))
+    spec = resolve_ivf(IVFSpec(n_clusters=c, payload_dtype=payload_dtype), u)
+    return rep, spec, build_index(rep, spec, measure)
+
+
+def _graphs(vals, ids):
+    g = finalize_topk(vals, ids)
+    return np.asarray(g.weights), np.asarray(g.indices)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_fused_full_probe_bitwise_equals_gemm(measure):
+    rep, spec, index = _mk(measure=measure)
+    q = rep[:40]
+    sid = jnp.arange(40, dtype=jnp.int32)
+    c = spec.n_clusters
+    vr, ir = search(index, q, 9, c, measure, self_ids=sid, scorer="jnp")
+    vf, if_ = search(index, q, 9, c, measure, self_ids=sid, scorer="fused")
+    wr, nr = _graphs(vr, ir)
+    wf, nf = _graphs(vf, if_)
+    np.testing.assert_array_equal(nr, nf)
+    np.testing.assert_array_equal(wr, wf)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_fused_partial_probe_matches_candidate_set(measure):
+    """At nprobe < C both scorers rank the *same* candidate set (the probed
+    cells are query-determined, not scorer-determined), so after canonical
+    normalization the selected neighbor sets agree exactly."""
+    rep, spec, index = _mk(measure=measure)
+    q = rep[:32]
+    sid = jnp.arange(32, dtype=jnp.int32)
+    vj, ij = search(index, q, 7, 5, measure, self_ids=sid, scorer="jnp")
+    vf, if_ = search(index, q, 7, 5, measure, self_ids=sid, scorer="fused")
+    got = float(recall_at_k(if_, ij, vf, vj))
+    assert got == pytest.approx(1.0)
+    # values agree as sets up to scorer algebra (the jnp scorer is a
+    # multiply-reduce, the kernel the HIGHEST-precision dot — ULP-level)
+    np.testing.assert_allclose(np.sort(np.asarray(vj), axis=1),
+                               np.sort(np.asarray(vf), axis=1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_probe_ok_masks_cells():
+    """probe_ok=False slots contribute nothing — the sharded router's
+    non-local mask is equivalent to not probing the cell at all."""
+    rep, spec, index = _mk()
+    q = rep[:16]
+    csims_probe = jax.lax.top_k(
+        jnp.matmul(q, index.centroids.T), 6)[1].astype(jnp.int32)
+    full = fused_probe_topk(q, csims_probe, index.lists, index.rows,
+                            index.scale, index.fill, k=5)
+    # masking rank 4/5 == probing only the first 4 cells
+    masked = fused_probe_topk(
+        q, csims_probe, index.lists, index.rows, index.scale, index.fill,
+        k=5, probe_ok=jnp.arange(6)[None, :] < 4)
+    short = fused_probe_topk(q, csims_probe[:, :4], index.lists, index.rows,
+                             index.scale, index.fill, k=5)
+    np.testing.assert_array_equal(np.asarray(masked[0]), np.asarray(short[0]))
+    np.testing.assert_array_equal(np.asarray(masked[1]), np.asarray(short[1]))
+    assert not np.array_equal(np.asarray(full[1]), np.asarray(masked[1]))
+
+
+def test_fused_int8_payload_dequantizes_in_kernel():
+    """Quantized payloads ride through the kernel: fused scores equal the
+    jnp scorer's dequantize-after-gather scores bitwise at full probe."""
+    rep, spec, index = _mk(payload_dtype="int8")
+    assert index.scale is not None
+    q = rep[:24]
+    sid = jnp.arange(24, dtype=jnp.int32)
+    c = spec.n_clusters
+    vr, ir = search(index, q, 9, c, "cosine", self_ids=sid, scorer="jnp")
+    vf, if_ = search(index, q, 9, c, "cosine", self_ids=sid, scorer="fused")
+    wr, nr = _graphs(vr, ir)
+    wf, nf = _graphs(vf, if_)
+    np.testing.assert_array_equal(nr, nf)
+    np.testing.assert_array_equal(wr, wf)
+
+
+def test_fused_empty_cells_and_small_k():
+    """Cells with fill < cap (and k > total candidates) surface (-inf, 0)
+    tails, never padding-slot garbage ids."""
+    rep = jax.random.normal(jax.random.PRNGKey(3), (20, 8))
+    spec = resolve_ivf(IVFSpec(n_clusters=4, slack=4.0), 20)
+    index = build_index(rep, spec, "cosine")
+    q = rep[:6]
+    vals, ids = search(index, q, 30, spec.n_clusters, "cosine",
+                       self_ids=jnp.arange(6, dtype=jnp.int32),
+                       scorer="fused")
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    empty = ~np.isfinite(vals)
+    assert empty.any()  # 19 candidates < k=30
+    assert (ids[empty] == 0).all()
+    live = ids[~empty]
+    assert ((live >= 0) & (live < 20)).all()
