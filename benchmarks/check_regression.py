@@ -58,6 +58,10 @@ METRIC_SOURCES = {
     "foldin_speedup": ("foldin_vs_refit", "speedup"),
     "refresh_stall_ratio": ("refresh_vs_refit", "stall_ratio"),
     "sharded_foldin_ratio": ("sharded_foldin_vs_single", "ratio"),
+    "sustained_qps": ("engine_vs_waves", "engine_qps"),
+    "p99_ms": ("engine_vs_waves", "engine_p99_ms"),
+    "shed_frac": ("engine_vs_waves", "shed_frac"),
+    "engine_qps_speedup": ("engine_vs_waves", "qps_speedup"),
 }
 
 

@@ -133,6 +133,36 @@ def _bench_refresh_vs_refit():
           f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
 
 
+def _bench_engine():
+    """`engine_vs_waves`: the continuous micro-batching request engine vs
+    the synchronous wave treatment on the same offered traffic — the
+    request-path serving acceptance row (docs/serving.md: >= 2x sustained
+    QPS with the engine's p95 at or under what the sync loop degrades to
+    at that rate, micro-batched results bitwise vs solo execution)."""
+    rows = paper_tables.engine_vs_waves_bench()
+    by = {r["variant"]: r for r in rows}
+    sy, en = by["sync_waves"], by["engine"]
+    speedup = en["qps"] / max(sy["qps"], 1e-9)
+    assert en["bitwise"], "micro-batched results diverged from solo execution"
+    assert en["nonfinite"] == 0, "non-finite predictions under load"
+    assert speedup >= 2.0, (
+        f"engine sustained {en['qps']:.0f} QPS < 2x the sync wave loop's "
+        f"{sy['qps']:.0f} — the micro-batching win regressed")
+    assert en["p95_ms"] <= sy["loaded_p95_ms"], (
+        f"engine p95 {en['p95_ms']:.1f}ms above the sync replay's loaded "
+        f"p95 {sy['loaded_p95_ms']:.1f}ms at the same offered rate")
+    _emit(f"engine_vs_waves[u={en['u']},max_batch=128]",
+          1e6 / max(en["qps"], 1e-9),
+          f"sync_qps={sy['qps']:.0f};engine_qps={en['qps']:.0f};"
+          f"qps_speedup={speedup:.1f}x;sync_p95_ms={sy['p95_ms']:.2f};"
+          f"sync_loaded_p95_ms={sy['loaded_p95_ms']:.1f};"
+          f"engine_p50_ms={en['p50_ms']:.2f};"
+          f"engine_p95_ms={en['p95_ms']:.2f};"
+          f"engine_p99_ms={en['p99_ms']:.2f};"
+          f"shed_frac={en['shed_frac']:.3f};folds={en['folds']};"
+          f"bitwise={en['bitwise']}")
+
+
 def _bench_ivf_vs_streaming():
     """`ivf_vs_streaming`: fold-in candidate generation through the IVF
     index (repro.retrieval) vs the streaming all-rows scan, on the drifting
@@ -257,6 +287,10 @@ def main(argv=None) -> None:
                     help="emit only the serving-ledger rows (foldin_vs_refit"
                     " + refresh_vs_refit + sharded_foldin_vs_single) — the "
                     "BENCH_serving.json trajectory source")
+    ap.add_argument("--engine-only", action="store_true",
+                    help="emit only the engine_vs_waves row (the CI "
+                    "request-path engine bench step; asserts the >= 2x "
+                    "sustained-QPS acceptance internally)")
     ap.add_argument("--scale", choices=("ci", "full"), default="ci",
                     help="geometry for the ivf_sharded family: 'full' is "
                     "the committed BENCH_retrieval.json acceptance scale "
@@ -287,6 +321,10 @@ def main(argv=None) -> None:
         _bench_foldin_vs_refit()
         _bench_refresh_vs_refit()
         _bench_sharded_foldin()
+    elif args.engine_only:
+        # explicitly selected: no guard — the engine's internal acceptance
+        # asserts (>= 2x QPS, bitwise micro-batching) must fail the CI step
+        _bench_engine()
     else:
         datasets = ["movielens100k", "netflix100k"]
         if args.full:
@@ -311,6 +349,8 @@ def main(argv=None) -> None:
         _guard("foldin_vs_refit", _bench_foldin_vs_refit)
         # Beyond-paper: background refresh vs synchronous refit-on-drift
         _guard("refresh_vs_refit", _bench_refresh_vs_refit)
+        # Beyond-paper: micro-batching request engine vs synchronous waves
+        _guard("engine_vs_waves", _bench_engine)
         # Beyond-paper: IVF candidate generation vs the streaming scan
         _guard("ivf_vs_streaming", _bench_ivf_vs_streaming)
         # Beyond-paper: mesh-sharded fold-in vs single-device

@@ -32,8 +32,18 @@
   representation. On CPU the device count is forced to K·L host devices
   (CI runs exactly this):
   ``python -m repro.launch.serve --workload cf --lifecycle --smoke --mesh pod=2,data=4``
+- ``cf --engine``: open-loop serving through the continuous micro-batching
+  request engine (``repro.serving``, docs/serving.md) — a load generator
+  drives mixed pair/top-N/fold-in traffic at a target arrival rate through
+  a deadline-aware batch former, bounded admission queue and async fold-in
+  lane; reports sustained QPS + p50/p95/p99 + shed rate. Under ``--mesh``
+  the request path is the ``shard_map`` query router (owner-routed neighbor
+  data, jaxpr-checked to materialize nothing population-sized):
+  ``python -m repro.launch.serve --workload cf --engine --smoke --mesh pod=4``
 
-CF latency is reported per wave as p50/p95 over the timed request loop. In
+CF latency is reported per wave as p50/p95/p99 over the timed request loop
+(``serving.stats`` — the same helper the engine uses, so numbers compare
+across modes). In
 plain ``cf`` mode fold-in changes U, so the first request after it recompiles
 the step and the wave loop re-warms before timing; ``--lifecycle`` is the
 production answer — U (and the fold-in batch) are padded to a geometric bucket
@@ -111,9 +121,13 @@ def _synth_ratings(rng, users, items, density=0.08):
     return jnp.asarray(r)
 
 
-def _percentiles(ts):
-    ms = np.asarray(ts) * 1e3
-    return float(np.percentile(ms, 50)), float(np.percentile(ms, 95))
+def _wave_stats(ts):
+    """Shared latency helper (p50/p95/p99 + count) — one percentile path for
+    the wave replays AND the request engine, so numbers compare across
+    modes (serving.stats)."""
+    from repro.serving.stats import latency_stats
+
+    return latency_stats(ts)
 
 
 def _cf_wave(state, rng, args, wave):
@@ -154,11 +168,9 @@ def _cf_wave(state, rng, args, wave):
         jax.block_until_ready(items_r)
         topn_ts.append(time.perf_counter() - t0)
 
-    p50, p95 = _percentiles(pair_ts)
-    t50, t95 = _percentiles(topn_ts)
+    ps, ts = _wave_stats(pair_ts), _wave_stats(topn_ts)
     print(f"wave {wave}: U={u} predict {args.requests}x{args.batch} pairs "
-          f"p50={p50:.2f}ms p95={p95:.2f}ms | "
-          f"top-{args.topn} x{args.batch} users p50={t50:.2f}ms p95={t95:.2f}ms")
+          f"{ps.brief()} | top-{args.topn} x{args.batch} users {ts.brief()}")
 
 
 def _serve_cf(args):
@@ -428,8 +440,7 @@ def _serve_cf_lifecycle(args):
     keyseq = iter(jax.random.split(jax.random.PRNGKey(42), 2 * args.waves + 8))
     for wave in range(args.waves):
         pair_ts, topn_ts = _timed_requests(bst, rng, args)
-        p50, p95 = _percentiles(pair_ts)
-        t50, t95 = _percentiles(topn_ts)
+        ps, ts_ = _wave_stats(pair_ts), _wave_stats(topn_ts)
 
         # ---- arrivals: withhold holdout ratings, fold the rest in ----------
         if wave + 1 < args.waves:
@@ -575,8 +586,8 @@ def _serve_cf_lifecycle(args):
                         + ee_note)
         print(f"wave {wave}: gen {pol.generation} U={int(bst.n_valid)}"
               f"/cap{bst.capacity} predict {args.requests}x{args.batch} pairs "
-              f"p50={p50:.2f}ms p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
-              f"p95={t95:.2f}ms | mae={snap.mae:.4f} cov={snap.coverage_ratio:.2f} "
+              f"{ps.brief()} | top-{args.topn} {ts_.brief()} | "
+              f"mae={snap.mae:.4f} cov={snap.coverage_ratio:.2f} "
               f"fold={snap.foldin_frac:.2f}" + ivf_note
               + (f" | breach: {'; '.join(reasons)}" if reasons else ""))
 
@@ -966,8 +977,7 @@ def _serve_cf_lifecycle_sharded(args):
             items_r, _ = buckets.recommend_topn_sharded(sst, qu, n=args.topn)
             jax.block_until_ready(items_r)
             topn_ts.append(time.perf_counter() - t0)
-        p50, p95 = _percentiles(pair_ts)
-        t50, t95 = _percentiles(topn_ts)
+        ps, ts_ = _wave_stats(pair_ts), _wave_stats(topn_ts)
 
         # ---- arrivals: fold into BOTH states, reservoir keeps logical ids --
         if wave + 1 < args.waves:
@@ -1124,10 +1134,27 @@ def _serve_cf_lifecycle_sharded(args):
                 print(f"wave {wave}: ivf recall below SLO -> nprobe "
                       f"escalated to {esc}/{index.n_clusters} "
                       f"(recall {rec:.3f}, probed/q={probed_q:.1f})")
+            ee_note = ""
+            if args.early_exit:
+                # adaptive probing through the SAME router: per-shard
+                # local-first budget slice, then each query retires a shard's
+                # scan once its local top-k stabilizes — probed/q is cells
+                # actually scored across the mesh (satellite of the engine
+                # PR: the sharded path now has the single-device --early-exit
+                # treatment, parity-tested at full probe)
+                qids_p, qrep_p, kk, (ve, ie) = probe
+                va, ia, probed = rt.search_early_exit_sharded(
+                    index, qrep_p, kk, retrieval.nprobe, mesh, axes,
+                    spec.d2, self_ids=qids_p,
+                    local_budget=probe_budget(retrieval.nprobe))
+                ee_rec = float(rt.recall_at_k(ia, ie, va, ve))
+                ee_probed = float(jnp.mean(probed))
+                ee_note = (f" probed/q={ee_probed:.1f}/{retrieval.nprobe} "
+                           f"(early-exit recall {ee_rec:.3f})")
             recalls.append(rec)
             ivf_note = (f" | ivf recall@{sst.state.graph.k}={rec:.3f} "
                         f"nprobe={retrieval.nprobe} probed/q={probed_q:.1f} "
-                        f"cellskew={cskew:.2f}")
+                        f"cellskew={cskew:.2f}" + ee_note)
 
         fills = np.asarray(sst.n_valid)
         # the proactive-rebalance gate rides the sharded snapshot's skew
@@ -1136,9 +1163,8 @@ def _serve_cf_lifecycle_sharded(args):
         rebal = policy.should_rebalance(pol, rspec, snap.shard_skew)
         print(f"wave {wave}: gen {pol.generation} U={len(id_shard)} "
               f"shards[{fills.min()}..{fills.max()}]/cap{sst.capacity} "
-              f"predict {args.requests}x{args.batch} pairs p50={p50:.2f}ms "
-              f"p95={p95:.2f}ms | top-{args.topn} p50={t50:.2f}ms "
-              f"p95={t95:.2f}ms | mae={snap.mae:.4f} "
+              f"predict {args.requests}x{args.batch} pairs {ps.brief()} | "
+              f"top-{args.topn} {ts_.brief()} | mae={snap.mae:.4f} "
               f"cov={snap.coverage_ratio:.2f} fold={snap.foldin_frac:.2f} "
               f"skew={snap.shard_skew:.2f} | bit-identical: {bool(same)}"
               + ivf_note
@@ -1181,6 +1207,331 @@ def _serve_cf_lifecycle_sharded(args):
                 f"{IVF_RECALL_SLO} — the probe router + escalation + "
                 "refresh rebuild failed to hold the SLO on the mesh")
     print("cf sharded lifecycle: done")
+
+
+# -------------------------------------------------------------- cf engine
+def _serve_cf_engine(args):
+    """Open-loop serving through the request engine (docs/serving.md):
+    continuous micro-batching over the warm bucketed executables, bounded
+    admission with load shedding, an async fold-in lane, and — under
+    ``--mesh`` — the shard_map query router instead of the GSPMD gather.
+    A load generator drives mixed pair/top-N/fold traffic at ``--rate``
+    requests/s for ``--duration`` seconds; the run reports sustained QPS,
+    p50/p95/p99 and shed rate, and ``--smoke`` asserts the SLOs under load:
+    QPS > 0, zero non-finite predictions, bitwise-vs-solo verification,
+    recall >= 0.95 (with ``--retrieval ivf``), and the bounded-compile and
+    no-materialization guarantees."""
+    from repro.core import LandmarkSpec, RatingMatrix, fit, knn
+    from repro.lifecycle import buckets
+    from repro.serving import (EngineConfig, LocalBackend, RequestEngine,
+                               ShardedBackend)
+    from repro.serving import router as srouter
+    from repro.serving.stats import latency_stats
+
+    arch = registry.get("landmark_cf")
+    spec: LandmarkSpec = arch.smoke_model if args.smoke else arch.model
+    spec = dataclasses.replace(spec, selection=args.selection)
+    if args.smoke:
+        _clamp_lifecycle_smoke(args)
+        args.duration = min(args.duration, 4.0)
+    rng = np.random.default_rng(0)
+    n0 = args.users  # load targets the base population: valid in every gen
+
+    r0 = _synth_ratings(rng, args.users, args.items)
+    t0 = time.perf_counter()
+    st = fit(jax.random.PRNGKey(0),
+             RatingMatrix(r0, args.users, args.items), spec)
+    jax.block_until_ready(st.graph.weights)
+    print(f"fit U={args.users} P={args.items} n={spec.n_landmarks} "
+          f"k={st.graph.k}: {(time.perf_counter()-t0)*1e3:.0f}ms")
+
+    # on a mesh, fold launches are serialized with reads (single-process
+    # host-mesh collective safety — see RequestEngine.exec_lock), so reads
+    # arriving mid-fold wait out the fold; the SLO reflects that
+    cfg = EngineConfig(max_batch=args.batch,
+                       min_shape=min(32, args.batch),
+                       queue_cap=args.batch * 8,
+                       max_wait_ms=2.0,
+                       slo_ms=2000.0 if args.mesh else 250.0,
+                       fold_bq=args.foldin,
+                       topn=args.topn)
+
+    sharded = bool(args.mesh)
+    if sharded:
+        names, sizes = _parse_mesh(args.mesh)
+        need = int(np.prod(sizes))
+        if jax.device_count() < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices but jax sees "
+                f"{jax.device_count()}")
+        mesh = jax.make_mesh(sizes, names)
+        axes = names
+        n_shards = need
+        min_shard_bucket = max(8, args.min_bucket // n_shards)
+        sst = buckets.from_state_sharded(st, mesh, axes, min_shard_bucket,
+                                         args.growth)
+        u_per = -(-args.users // n_shards)
+        id_shard = (np.arange(args.users) // u_per).astype(np.int32)
+        id_slot = (np.arange(args.users) % u_per).astype(np.int32)
+        backend = ShardedBackend(sst, id_shard, id_slot, spec,
+                                 min_bucket=min_shard_bucket,
+                                 growth=args.growth,
+                                 warm_shapes=cfg.batch_shapes(),
+                                 warm_topn=args.topn)
+        # one-time jaxpr proof: the routed request path materializes no
+        # replicated (S*C, .) row-space array and no (b, U) score tensor
+        n_avals, offenders = srouter.materialization_check(
+            sst, cfg.max_batch, args.topn)
+        print(f"router materialization check: {n_avals} avals scanned, "
+              f"{len(offenders)} offenders")
+        assert not offenders, offenders
+        # full-batch bitwise: routed == the single-device reference
+        shadow = buckets.from_state(st, args.min_bucket, args.growth)
+        pu = rng.integers(0, n0, cfg.max_batch)
+        pi = rng.integers(0, args.items, cfg.max_batch)
+        routed = np.asarray(backend.predict_pairs(backend.snapshot(), pu, pi))
+        ref = np.asarray(buckets.predict_pairs(
+            shadow, jnp.asarray(pu, jnp.int32), jnp.asarray(pi, jnp.int32)))
+        ri, rs = backend.recommend_topn(backend.snapshot(), pu, args.topn)
+        fi, fs = buckets.recommend_topn(shadow, jnp.asarray(pu, jnp.int32),
+                                        n=args.topn)
+        same = (np.array_equal(routed, ref)
+                and np.array_equal(np.asarray(ri), np.asarray(fi))
+                and np.array_equal(np.asarray(rs), np.asarray(fs)))
+        print(f"routed vs single-device reference ({cfg.max_batch} queries): "
+              f"bit-identical={same}")
+        assert same, "shard_map router diverged from the reference"
+        families = {"pair": srouter.predict_pairs_routed,
+                    "topn": srouter._recommend_topn_routed}
+    else:
+        bst = buckets.from_state(st, args.min_bucket, args.growth)
+        backend = LocalBackend(bst, spec, min_bucket=args.min_bucket,
+                               growth=args.growth,
+                               warm_shapes=cfg.batch_shapes(),
+                               warm_topn=args.topn)
+        families = {"pair": knn.predict_pairs_graph,
+                    "topn": knn.recommend_topn_graph}
+    cache0 = {name: fn._cache_size() for name, fn in families.items()}
+
+    # optional IVF sidecar: retrieval health probed *while the engine is
+    # under load* (index maintenance itself rides the lifecycle loop)
+    use_ivf = args.retrieval == "ivf"
+    recalls, probeds, ee_recalls = [], [], []
+    if use_ivf:
+        from repro import retrieval as rt
+
+        user_ivf = rt.IVFSpec(
+            n_clusters=args.clusters or None, nprobe=args.nprobe or None)
+        retrieval = (rt.resolve_ivf_sharded(user_ivf, n0, n_shards)
+                     if sharded else rt.resolve_ivf(user_ivf, n0))
+        if args.smoke and not args.nprobe:
+            # same smoke-scale bump as the lifecycle replays
+            retrieval = dataclasses.replace(
+                retrieval,
+                nprobe=max(retrieval.nprobe, retrieval.n_clusters // 2))
+        index = (rt.build_index_sharded(st.representation, retrieval, mesh,
+                                        axes, spec.d2) if sharded
+                 else rt.build_index(st.representation, retrieval, spec.d2))
+        kk = st.graph.k
+        qids0 = jnp.asarray(rng.integers(0, n0, min(args.batch, n0))
+                            .astype(np.int32))
+        qrep0 = st.representation[qids0]
+        if sharded:
+            ve, ie, _ = rt.search_sharded(index, qrep0, kk, index.n_clusters,
+                                          mesh, axes, spec.d2, self_ids=qids0)
+        else:
+            ve, ie = rt.search(index, qrep0, kk, index.n_clusters, spec.d2,
+                               self_ids=qids0)
+
+        def recall_probe():
+            """(SLO recall, mean probed/q, early-exit recall or None).
+
+            The SLO is judged on the full-budget search — the lever the
+            escalation loop actually controls. Early exit rides atop the
+            escalated budget as adaptive probing: its recall and probed/q
+            are reported, not gated (patience exits cap probing no matter
+            how far nprobe escalates, same split the lifecycle waves use).
+            """
+            np_ = retrieval.nprobe
+            if sharded:
+                lb = min(np_, max(1, 2 * (-(-np_ // n_shards))))
+                va, ia, probed = rt.search_sharded(
+                    index, qrep0, kk, np_, mesh, axes, spec.d2,
+                    self_ids=qids0, local_budget=lb)
+            else:
+                va, ia = rt.search(index, qrep0, kk, np_, spec.d2,
+                                   self_ids=qids0)
+                probed = jnp.full((len(qids0),), np_)
+            rec = float(rt.recall_at_k(ia, ie, va, ve))
+            ee = None
+            if args.early_exit:
+                if sharded:
+                    ev, ei, probed = rt.search_early_exit_sharded(
+                        index, qrep0, kk, np_, mesh, axes, spec.d2,
+                        self_ids=qids0, local_budget=lb)
+                else:
+                    ev, ei, probed = rt.search_early_exit(
+                        index, qrep0, kk, np_, spec.d2, self_ids=qids0)
+                ee = float(rt.recall_at_k(ei, ie, ev, ve))
+            return rec, float(jnp.mean(probed)), ee
+
+        rec0, _pq, _ee = recall_probe()  # warm the probe executables
+        while rec0 < IVF_RECALL_SLO and retrieval.nprobe < index.n_clusters:
+            esc = min(index.n_clusters, max(retrieval.nprobe + 1,
+                                            (retrieval.nprobe * 3) // 2))
+            retrieval = dataclasses.replace(retrieval, nprobe=esc)
+            rec0, _pq, _ee = recall_probe()
+        print(f"retrieval: {'sharded ' if sharded else ''}ivf "
+              f"C={index.n_clusters} nprobe={retrieval.nprobe} "
+              f"pre-load recall@{kk}={rec0:.3f}")
+
+    eng = RequestEngine(backend, cfg, clock=time.perf_counter)
+    # warm one executable per (batch shape, kind) — the compile budget the
+    # run is held to (x live buckets; folds may grow the bucket once)
+    pub = backend.snapshot()
+    for s in cfg.batch_shapes():
+        z = np.zeros(s, np.int64)
+        jax.block_until_ready(backend.predict_pairs(pub, z, z))
+        _ti, _ts = backend.recommend_topn(pub, z, args.topn)
+        jax.block_until_ready(_ts)
+    # pre-warm the fold path outside the timed window: the first fold pays
+    # the fold executables + the regrown-capacity read warms, and under
+    # serialized launches (mesh) that compile would stall in-window reads
+    backend.fold_in(np.asarray(_synth_ratings(rng, args.foldin, args.items)),
+                    cfg.fold_bq)
+    pub = backend.snapshot()
+
+    # closed-loop synchronous baseline: the wave treatment — one padded
+    # jitted call per request, each waiting for the previous; its capacity
+    # anchors the auto rate and the printed comparison
+    rq = np.random.default_rng(7)
+    svc = []
+    for _ in range(24):
+        m = int(rq.integers(4, 17))
+        u = np.zeros(cfg.pad_shape(m), np.int64)
+        u[:m] = rq.integers(0, n0, m)
+        it = np.zeros_like(u)
+        it[:m] = rq.integers(0, args.items, m)
+        t0 = time.perf_counter()
+        jax.block_until_ready(backend.predict_pairs(pub, u, it))
+        svc.append(time.perf_counter() - t0)
+    sync = latency_stats(svc)
+    sync_qps = 1.0 / float(np.mean(svc))
+    rate = args.rate if args.rate > 0 else 2.0 * sync_qps
+    print(f"sync baseline: {sync_qps:.0f} req/s closed-loop "
+          f"({sync.brief()}) -> open-loop target {rate:.0f} req/s")
+
+    fold_batches = [np.asarray(_synth_ratings(rq, args.foldin, args.items))
+                    for _ in range(4)]
+    eng.start()
+    reqs = []
+    t_start = time.perf_counter()
+    t_stop = t_start + args.duration
+    next_arr = t_start
+    fold_every = args.duration / 3.0
+    next_fold = t_start + fold_every * 0.6
+    next_probe = t_start + args.duration / 6.0
+    folds_sent = 0
+    while True:
+        now = time.perf_counter()
+        if now >= t_stop:
+            break
+        if now >= next_arr:
+            m = int(rq.integers(4, 17))
+            uu = rq.integers(0, n0, m)
+            if rq.random() < 0.15:
+                r = eng.submit("topn", users=uu)
+            else:
+                r = eng.submit("pair", users=uu,
+                               items=rq.integers(0, args.items, m))
+            if r is not None:
+                reqs.append(r)
+            next_arr += rq.exponential(1.0 / rate)
+            continue
+        if now >= next_fold and folds_sent < len(fold_batches):
+            eng.submit("fold", rows=fold_batches[folds_sent])
+            folds_sent += 1
+            next_fold += fold_every
+            continue
+        if use_ivf and now >= next_probe:
+            # retrieval health *under* load; the lock keeps the probe's
+            # collective-dense program from interleaving with a read batch
+            # on the shared per-device threads (see RequestEngine)
+            with eng.exec_lock:
+                rec, pq, ee = recall_probe()
+            recalls.append(rec)
+            probeds.append(pq)
+            if ee is not None:
+                ee_recalls.append(ee)
+            next_probe += args.duration / 6.0
+            continue
+        time.sleep(min(0.0005, max(0.0, next_arr - now)))
+    for r in reqs:  # drain: every admitted request must complete
+        if not r.done.wait(timeout=60.0):
+            raise RuntimeError("admitted request never completed")
+    t_last = max([r.t_done for r in reqs] or [t_start])
+    eng.stop()
+
+    # post-run bitwise audit against the final generation, solo replay
+    for _ in range(8):
+        m = int(rq.integers(1, 17))
+        uu = rq.integers(0, backend.n_users, m)
+        eng.submit("pair", users=uu, items=rq.integers(0, args.items, m))
+        eng.submit("topn", users=uu)
+    eng.pump_reads()
+    checked, bad = eng.verify_sample(limit=16)
+
+    stats = eng.stats()
+    elapsed = max(t_last - t_start, 1e-9)
+    sustained_qps = stats["reads_completed"] / elapsed
+    rl = stats["read_latency"]
+    print(f"engine: sustained {sustained_qps:.0f} QPS over {elapsed:.1f}s "
+          f"({stats['reads_completed']} reads in {stats['batches']} batches, "
+          f"mean {stats['mean_batch_rows']:.1f} rows, "
+          f"pad {stats['pad_frac']:.0%})")
+    print(f"latency under load: {rl.brief()} | admission: "
+          f"shed_frac={stats['shed_frac']:.3f} "
+          f"(queue_cap={cfg.queue_cap} rows)")
+    overlap = ("fold launches serialized with reads — host-mesh "
+               "collective safety" if backend.serialize_folds
+               else "reads never waited on a write")
+    print(f"fold lane: {stats['completed']['fold']} batches "
+          f"(+{stats['folded_rows']} users -> gen {stats['generation']}, "
+          f"U={backend.n_users}) fold {stats['fold_latency'].brief()} — "
+          f"{overlap}")
+    print(f"bitwise vs solo replay: {checked} requests re-run, "
+          f"{bad} mismatches | non-finite predictions: {stats['nonfinite']}")
+    caps = sorted(backend.caps_used)
+    counts = {name: fn._cache_size() - cache0[name]
+              for name, fn in families.items()}
+    budget = len(cfg.batch_shapes()) * len(caps)
+    print(f"executables per request-path family: {counts} "
+          f"(budget {budget}: {len(cfg.batch_shapes())} batch shapes x "
+          f"buckets {caps})")
+    assert max(counts.values()) <= budget, (
+        f"recompile count {counts} exceeds shapes x buckets budget {budget}")
+    if use_ivf:
+        ee_note = (f" early-exit recall {np.mean(ee_recalls):.3f}"
+                   if ee_recalls else "")
+        print(f"ivf under load: {len(recalls)} probes, recall@{kk} "
+              f"{[f'{r:.3f}' for r in recalls]} "
+              f"probed/q={np.mean(probeds):.1f}/{retrieval.nprobe}{ee_note}"
+              if recalls else "ivf under load: window too short for probes")
+    assert bad == 0, "micro-batched results diverged from solo execution"
+    assert stats["nonfinite"] == 0, "non-finite predictions under load"
+    if args.smoke:
+        assert sustained_qps > 0, "engine completed no reads under load"
+        assert rl.count > 0 and rl.p95_ms <= cfg.slo_ms, (
+            f"read p95 {rl.p95_ms:.1f}ms breached the {cfg.slo_ms:.0f}ms "
+            "SLO under load")
+        assert stats["completed"]["fold"] >= 1, (
+            "smoke run must exercise the fold lane")
+        if use_ivf:
+            assert recalls and float(np.mean(recalls)) >= IVF_RECALL_SLO, (
+                f"ivf recall under load "
+                f"{np.mean(recalls) if recalls else float('nan'):.3f} "
+                f"< {IVF_RECALL_SLO}")
+    print("cf engine: done")
 
 
 def main(argv=None):
@@ -1256,12 +1607,27 @@ def main(argv=None):
                     help="retrieval=ivf: per-query adaptive probing — a "
                     "query stops once its top-k survived `patience` further "
                     "cells; wave stats report probed-cells/query "
-                    "(docs/retrieval.md)")
+                    "(docs/retrieval.md). Works on both the single-device "
+                    "and --mesh paths (search_early_exit_sharded)")
+    # cf --engine flags
+    ap.add_argument("--engine", action="store_true",
+                    help="cf: serve through the continuous micro-batching "
+                    "request engine (repro.serving) — open-loop load "
+                    "generator, admission control, async fold-in lane; with "
+                    "--mesh, the shard_map query router (docs/serving.md)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="engine: target arrival rate in requests/s "
+                    "(0 = auto: 2x the measured synchronous closed-loop "
+                    "capacity)")
+    ap.add_argument("--duration", type=float, default=8.0,
+                    help="engine: load-generation window in seconds "
+                    "(smoke clamps to 4)")
     args = ap.parse_args(argv)
-    if args.retrieval == "ivf" and not args.lifecycle:
-        raise SystemExit("--retrieval ivf runs on the lifecycle replay "
-                         "(--workload cf --lifecycle); add --mesh to route "
-                         "probes through the sharded posting lists")
+    if args.retrieval == "ivf" and not (args.lifecycle or args.engine):
+        raise SystemExit("--retrieval ivf runs on the lifecycle replay or "
+                         "the request engine (--workload cf --lifecycle / "
+                         "--engine); add --mesh to route probes through the "
+                         "sharded posting lists")
     if args.mesh:
         # must precede first backend use: force a host-platform device count
         # big enough for the mesh (no-op when XLA_FLAGS already forces one)
@@ -1278,7 +1644,9 @@ def main(argv=None):
     args.requests = max(1, args.requests)  # the wave loops time at least one
 
     if args.workload == "cf":
-        if args.lifecycle and args.mesh:
+        if args.engine:
+            _serve_cf_engine(args)
+        elif args.lifecycle and args.mesh:
             _serve_cf_lifecycle_sharded(args)
         elif args.lifecycle:
             _serve_cf_lifecycle(args)

@@ -41,6 +41,7 @@ from .sharded import (
     build_index_sharded,
     ensure_index_capacity_sharded,
     resolve_ivf_sharded,
+    search_early_exit_sharded,
     search_sharded,
     shard_index,
 )
@@ -67,6 +68,7 @@ __all__ = [
     "score_candidates_kernel",
     "search",
     "search_early_exit",
+    "search_early_exit_sharded",
     "search_sharded",
     "shard_index",
 ]

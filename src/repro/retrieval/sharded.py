@@ -332,3 +332,116 @@ def search_sharded(
         out_specs=(P(None, None), P(None, None), P(None)),
         check_rep=False,
     )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "mesh", "axes",
+                                             "measure", "patience",
+                                             "local_budget"))
+def search_early_exit_sharded(
+    index: IVFIndex,
+    queries: jax.Array,  # (b, n) replicated query rows
+    k: int,
+    nprobe: int,
+    mesh: Mesh,
+    axes: Tuple[str, ...],
+    measure: str = "cosine",
+    *,
+    self_ids: Optional[jax.Array] = None,
+    patience: int = 2,
+    local_budget: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-query early exit with the ``search_sharded`` routing treatment.
+
+    Same probe router: the replicated probe list is sorted local-first per
+    shard and clipped to ``local_budget`` ranks, so each shard scans only
+    cells it owns, in its local probe-preference order. On top of that each
+    shard runs the single-device adaptive traversal (``search_early_exit``):
+    a query stops scoring this shard's cells once its *local* running top-k
+    has been stable for ``patience`` consecutive scored cells. Stability and
+    the ``probed`` ledger only advance on ranks the shard actually scores
+    (local hits form a prefix after the stable sort, so a foreign rank can
+    never retire a query early).
+
+    Returns replicated ``(vals, ids, probed)`` with ``probed`` (b,) int32 =
+    cells scored summed across shards — at full probe with no exits that is
+    exactly ``nprobe`` (every cell is owned once). Merge is the canonical
+    (value desc, id asc) cross-shard merge; with ``patience >= nprobe`` the
+    result matches single-device ``search_early_exit`` on tie-free data
+    (same ``_gathered_sims`` scorer — parity-tested), and early exits trade
+    recall exactly like a smaller nprobe, which the serving SLO escalation
+    already measures.
+    """
+    if index.is_compact:
+        index = index.to_full()
+    s = cf_shard_count(mesh, axes)
+    c, cap = index.n_clusters, index.capacity
+    c_ps = c // s
+    nprobe = min(max(nprobe, 1), c)
+    patience = max(int(patience), 1)
+    full = nprobe >= c
+    budget = c_ps if full else min(local_budget or nprobe, nprobe)
+    b = queries.shape[0]
+    q = queries.astype(jnp.float32)
+    sids = (self_ids.astype(jnp.int32) if self_ids is not None
+            else jnp.full((b,), -1, jnp.int32))
+    csims = dense_similarity(q, index.centroids, measure)
+    _, probe = jax.lax.top_k(csims, nprobe)  # (b, nprobe) replicated
+    probe = probe.astype(jnp.int32)
+    slot = jnp.arange(cap)
+    opt_scale = [index.scale] if index.scale is not None else []
+
+    def inner(q, probe, sids, lists_l, rows_l, scale_l, fill):
+        lin = shard_linear_index(mesh, axes)
+        scale_l = scale_l[0] if scale_l else None
+        local = (probe // c_ps) == lin
+        order = jnp.argsort(~local, axis=1)  # stable: local hits lead
+        pr = jnp.take_along_axis(probe, order, axis=1)[:, :budget]
+        ok = jnp.take_along_axis(local, order, axis=1)[:, :budget]
+
+        def step(carry, xs):
+            vals, ids, stable, probed, active = carry
+            prr, okr = xs  # (b,) global cell + is-local at this local rank
+            score = active & okr
+            lc = jnp.where(okr, prr - lin * c_ps, 0)
+            rows = dequantize_payload(
+                rows_l[lc],  # (b, cap, n) — one local cell per query
+                None if scale_l is None else scale_l[lc])
+            cc = lists_l[lc].astype(jnp.int32)
+            live = slot[None, :] < fill[jnp.clip(prr, 0, c - 1)][:, None]
+            sims = _gathered_sims(q, rows, measure)
+            sims = jnp.where(~live | (cc == sids[:, None])
+                             | ~score[:, None], -jnp.inf, sims)
+            mv, mi = _padded_topk(jnp.concatenate([vals, sims], axis=1),
+                                  jnp.concatenate([ids, cc], axis=1), k)
+            changed = jnp.any((mv != vals) | (mi != ids), axis=1)
+            stable = jnp.where(changed, 0,
+                               stable + score.astype(jnp.int32))
+            probed = probed + score.astype(jnp.int32)
+            active = active & (stable < patience)
+            return (mv, mi, stable, probed, active), None
+
+        init = (jnp.full((b, k), -jnp.inf),
+                jnp.zeros((b, k), jnp.int32),
+                jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b,), jnp.int32),
+                jnp.ones((b,), bool))
+        (lv, li, _, probed, _), _ = jax.lax.scan(step, init, (pr.T, ok.T))
+        li = jnp.where(jnp.isneginf(lv), INT_MAX, li)
+
+        # the only request-path collectives: (b,) counts + (b, k) lists
+        probed = jax.lax.psum(probed, axes)
+        av = jax.lax.all_gather(lv, axes)
+        ai = jax.lax.all_gather(li, axes)
+        mv, mi = _canon_topk(
+            jnp.moveaxis(av, 0, 1).reshape(b, -1),
+            jnp.moveaxis(ai, 0, 1).reshape(b, -1), k)
+        return mv, jnp.where(jnp.isneginf(mv), 0, mi), probed
+
+    row2, row3 = P(axes, None), P(axes, None, None)
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(None, None), P(None, None), P(None), row2, row3,
+                  [row2] * len(opt_scale), P(None)),
+        out_specs=(P(None, None), P(None, None), P(None)),
+        check_rep=False,
+    )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill)

@@ -1,0 +1,34 @@
+"""Request-path serving: micro-batching engine, query router, latency stats.
+
+``serving.stats`` is the shared p50/p95/p99 helper (wave loops + engine),
+``serving.engine`` the continuous micro-batching core with admission control
+and the async fold lane, ``serving.router`` the shard_map owner-routed
+request path for the mesh. ``launch/serve.py --engine`` wires them into the
+load-generator harness.
+"""
+from repro.serving.engine import (
+    EngineConfig,
+    LocalBackend,
+    Request,
+    RequestEngine,
+    ShardedBackend,
+)
+from repro.serving.router import (
+    materialization_check,
+    predict_pairs_routed,
+    recommend_topn_routed,
+)
+from repro.serving.stats import LatencyStats, latency_stats
+
+__all__ = [
+    "EngineConfig",
+    "LatencyStats",
+    "LocalBackend",
+    "Request",
+    "RequestEngine",
+    "ShardedBackend",
+    "latency_stats",
+    "materialization_check",
+    "predict_pairs_routed",
+    "recommend_topn_routed",
+]

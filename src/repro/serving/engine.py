@@ -1,0 +1,555 @@
+"""Continuous micro-batching request engine over the warm bucketed state.
+
+The wave loops in ``launch/serve.py`` replay *synchronous* traffic: one
+batch at a time, reads and fold-ins strictly interleaved. A server faces
+concurrent pair/top-N/fold-in requests with tail-latency SLOs. This module
+is that server core, kept deliberately host-side and synchronous-testable:
+
+  queue      ``submit()`` admits a request into a bounded deadline heap;
+             admission is by *rows* (a top-N request for 32 users costs 32
+             rows of queue budget). Overflow sheds — the caller gets
+             ``None`` back and the shed counter feeds ``shed_frac``.
+  former     ``pump_reads()`` pops requests in deadline order, packs
+             same-kind runs up to ``max_batch`` rows, pads to the next
+             power-of-two batch shape, and replays ONE jitted call per
+             batch. Shapes are drawn from ``EngineConfig.batch_shapes()``,
+             so compile count stays bounded at |shapes| x |buckets| per
+             request kind — the same executables the lifecycle waves warm.
+  fold lane  writes go to a separate queue drained by ``pump_folds()`` on
+             its own cadence (own thread in threaded mode). A fold never
+             runs on the read path; it builds the next-generation state off
+             to the side and swaps it in with one atomic publish, so an
+             in-flight read batch keeps the generation it started with.
+  bit-identity
+             per-row kNN math is row-independent (reductions run over the
+             fixed ``k``/``P`` axes, never over the batch axis), so any
+             packing/padding of admitted requests yields bitwise the same
+             per-row results as executing each request alone —
+             ``verify_sample()`` re-checks exactly that against the live
+             generation, and ``tests/test_serving_engine.py`` asserts it
+             across random interleavings.
+
+Two backends give the engine one logical-id API on both topologies:
+``LocalBackend`` serves a single-device ``BucketedState``;
+``ShardedBackend`` serves a ``ShardedLandmarkState`` through the
+``serving.router`` shard_map route (never the GSPMD gather), translating
+logical ids to ``shard * capacity + slot`` at execution time against the
+same published generation tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.lifecycle import buckets
+from repro.serving.stats import latency_stats
+
+READ_KINDS = ("pair", "topn")
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted request. ``done`` fires after its batch executes."""
+
+    kind: str                       # "pair" | "topn" | "fold"
+    users: Optional[np.ndarray]     # logical user ids (reads)
+    items: Optional[np.ndarray]     # item ids (pair reads only)
+    rows: Optional[np.ndarray]      # dense rating rows (folds only)
+    deadline: float                 # absolute monotonic seconds
+    t_submit: float
+    seq: int
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: object = None           # (b,) preds | (items, scores) | gen
+    generation: int = -1            # generation the request executed against
+    t_done: float = 0.0
+
+    @property
+    def n_rows(self) -> int:
+        src = self.rows if self.kind == "fold" else self.users
+        return int(len(src))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Queueing-model knobs. ``batch_shapes()`` is the compile budget."""
+
+    max_batch: int = 128            # rows per executed read batch
+    min_shape: int = 8              # smallest padded batch shape
+    queue_cap: int = 1024           # admission bound, in rows
+    max_wait_ms: float = 2.0        # batch-fill wait (threaded mode)
+    slo_ms: float = 50.0            # default per-request deadline
+    fold_queue_cap: int = 64        # fold lane bound, in requests
+    fold_bq: int = 32               # fold-in micro-batch quantum
+    topn: int = 10
+
+    def batch_shapes(self) -> Tuple[int, ...]:
+        shapes = []
+        s = max(1, self.min_shape)
+        while s < self.max_batch:
+            shapes.append(s)
+            s *= 2
+        shapes.append(self.max_batch)
+        return tuple(shapes)
+
+    def pad_shape(self, rows: int) -> int:
+        for s in self.batch_shapes():
+            if rows <= s:
+                return s
+        return self.max_batch
+
+
+class LocalBackend:
+    """Single-device executor: logical user id == dense row index.
+
+    ``fold_in_bucketed`` donates its input, so the fold lane clones the
+    state before folding — the previous generation's buffers stay alive for
+    any read batch still holding them, and the new state swaps in via one
+    atomic publish.
+    """
+
+    serialize_folds = False  # one device, no collectives: true overlap
+
+    def __init__(self, bst: buckets.BucketedState, spec, *,
+                 min_bucket: int = 256, growth: float = 2.0,
+                 warm_shapes: Tuple[int, ...] = (), warm_topn: int = 10):
+        self.spec = spec
+        self.min_bucket = min_bucket
+        self.growth = growth
+        self.warm_shapes = warm_shapes
+        self.warm_topn = warm_topn
+        self._pub = (bst, 0)        # (state, generation) — one atomic cell
+        self.caps_used = {bst.capacity}  # the serve-path compile budget axis
+
+    def _warm(self, pub) -> None:
+        """Compile the read executables for a new bucket capacity BEFORE the
+        publish — run on the fold lane, so a capacity regrow never makes a
+        read batch pay the recompile (the p99 spike the wave replays dodge
+        by warming inside the timed loop)."""
+        for s in self.warm_shapes:
+            z = np.zeros(s, np.int64)
+            jax.block_until_ready(self.predict_pairs(pub, z, z))
+            _i, _s = self.recommend_topn(pub, z, self.warm_topn)
+            jax.block_until_ready(_s)
+
+    @property
+    def generation(self) -> int:
+        return self._pub[1]
+
+    @property
+    def n_users(self) -> int:
+        return int(self._pub[0].n_valid)
+
+    def snapshot(self):
+        return self._pub
+
+    def predict_pairs(self, pub, users: np.ndarray, items: np.ndarray):
+        bst, _ = pub
+        return buckets.predict_pairs(bst, jnp.asarray(users, jnp.int32),
+                                     jnp.asarray(items, jnp.int32))
+
+    def recommend_topn(self, pub, users: np.ndarray, n: int):
+        bst, _ = pub
+        return buckets.recommend_topn(bst, jnp.asarray(users, jnp.int32),
+                                      n=n)
+
+    def fold_in(self, rows: np.ndarray, bq: int) -> int:
+        bst, gen = self._pub
+        clone = jax.tree.map(jnp.copy, bst)   # donation safety
+        new = buckets.fold_in_rows(clone, jnp.asarray(rows), bq, self.spec,
+                                   min_bucket=self.min_bucket,
+                                   growth=self.growth)
+        jax.block_until_ready(new.state.ratings)
+        if new.capacity not in self.caps_used:
+            self._warm((new, gen + 1))
+            self.caps_used.add(new.capacity)
+        self._pub = (new, gen + 1)
+        return gen + 1
+
+
+class ShardedBackend:
+    """Mesh executor: reads go through the shard_map query router, writes
+    through ``fold_in_rows_sharded``. Logical ids translate to sharded row
+    ids (``shard * capacity + slot``) at execution time against the same
+    published (state, tables, generation) tuple, so a capacity regrow
+    between publish points can never mix old ids with a new layout.
+    """
+
+    # collective programs from two host threads can deadlock the shared
+    # per-device rendezvous pool on a single-process mesh — the engine must
+    # serialize fold launches with read launches (see RequestEngine)
+    serialize_folds = True
+
+    def __init__(self, sstate, id_shard: np.ndarray, id_slot: np.ndarray,
+                 spec, *, min_bucket: int = 32, growth: float = 2.0,
+                 warm_shapes: Tuple[int, ...] = (), warm_topn: int = 10):
+        self.spec = spec
+        self.min_bucket = min_bucket
+        self.growth = growth
+        self.warm_shapes = warm_shapes
+        self.warm_topn = warm_topn
+        self._pub = (sstate, np.asarray(id_shard), np.asarray(id_slot), 0)
+        self.caps_used = {sstate.capacity}
+
+    def _warm(self, pub) -> None:
+        """Pre-compile the routed read executables at a new shard capacity on
+        the fold lane, so the publish never hands reads a cold executable."""
+        for s in self.warm_shapes:
+            z = np.zeros(s, np.int64)
+            jax.block_until_ready(self.predict_pairs(pub, z, z))
+            _i, _s = self.recommend_topn(pub, z, self.warm_topn)
+            jax.block_until_ready(_s)
+
+    @property
+    def generation(self) -> int:
+        return self._pub[3]
+
+    @property
+    def n_users(self) -> int:
+        return len(self._pub[1])
+
+    def snapshot(self):
+        return self._pub
+
+    @staticmethod
+    def _sharded_ids(pub, users: np.ndarray) -> jnp.ndarray:
+        sstate, id_shard, id_slot, _ = pub
+        sids = id_shard[users] * sstate.capacity + id_slot[users]
+        return jnp.asarray(sids, jnp.int32)
+
+    def predict_pairs(self, pub, users: np.ndarray, items: np.ndarray):
+        from repro.serving.router import predict_pairs_routed
+        return predict_pairs_routed(pub[0], self._sharded_ids(pub, users),
+                                    jnp.asarray(items, jnp.int32))
+
+    def recommend_topn(self, pub, users: np.ndarray, n: int):
+        from repro.serving.router import recommend_topn_routed
+        return recommend_topn_routed(pub[0], self._sharded_ids(pub, users),
+                                     n=n)
+
+    def fold_in(self, rows: np.ndarray, bq: int) -> int:
+        sstate, id_shard, id_slot, gen = self._pub
+        new, shards, slots = buckets.fold_in_rows_sharded(
+            sstate, jnp.asarray(rows), bq, self.spec,
+            min_bucket=self.min_bucket, growth=self.growth)
+        jax.block_until_ready(new.state.ratings)
+        pub = (new,
+               np.concatenate([id_shard, np.asarray(shards)]),
+               np.concatenate([id_slot, np.asarray(slots)]),
+               gen + 1)
+        if new.capacity not in self.caps_used:
+            self._warm(pub)
+            self.caps_used.add(new.capacity)
+        self._pub = pub
+        return gen + 1
+
+
+class RequestEngine:
+    """Deadline-heap admission + continuous micro-batching + async folds.
+
+    The core is synchronous and single-threaded-testable: ``submit()`` then
+    ``pump_reads()`` / ``pump_folds()``. ``start()`` wraps the two pumps in
+    their own threads for open-loop load generation; folds then drain on a
+    cadence that never touches the read thread.
+
+    ``exec_lock`` serializes device-program *launches*. Read batches always
+    hold it (uncontended on the happy path — microseconds). Folds take it
+    only when the backend sets ``serialize_folds`` (the sharded backend: on
+    a single-process host mesh, two concurrently-launched collective
+    programs can each park a subset of the shared per-device threads at
+    their rendezvous and starve the other program's remaining ranks — a
+    permanent deadlock, not a slowdown). Sidecar device work that runs
+    beside a live engine (e.g. retrieval health probes) must hold the same
+    lock for the same reason.
+    """
+
+    def __init__(self, backend, config: EngineConfig = EngineConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.backend = backend
+        self.config = config
+        self.clock = clock
+        self.exec_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._read_cond = threading.Condition(self._lock)
+        self._fold_cond = threading.Condition(self._lock)
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._folds: List[Request] = []
+        self._queued_rows = 0
+        self._seq = 0
+        self._threads: List[threading.Thread] = []
+        self._running = False
+        # stats
+        self.submitted = {k: 0 for k in READ_KINDS + ("fold",)}
+        self.shed = {k: 0 for k in READ_KINDS + ("fold",)}
+        self.completed = {k: 0 for k in READ_KINDS + ("fold",)}
+        self.latencies = {k: [] for k in READ_KINDS + ("fold",)}
+        self.batches = 0
+        self.exec_rows = 0
+        self.pad_rows = 0
+        self.nonfinite = 0
+        self.folded_rows = 0
+        self._verify_ring: List[Tuple[Request, object]] = []
+        self._verify_cap = 64
+
+    # ------------------------------------------------------------- admission
+    def submit(self, kind: str, *, users=None, items=None, rows=None,
+               deadline_ms: Optional[float] = None) -> Optional[Request]:
+        """Admit one request; returns it, or ``None`` when shed."""
+        now = self.clock()
+        slo = self.config.slo_ms if deadline_ms is None else deadline_ms
+        if kind in READ_KINDS:
+            users = np.asarray(users, np.int64)
+            if kind == "pair":
+                items = np.asarray(items, np.int64)
+            req = Request(kind, users, items, None, now + slo / 1e3, now, 0)
+            if req.n_rows > self.config.max_batch:
+                raise ValueError(
+                    f"request of {req.n_rows} rows exceeds max_batch="
+                    f"{self.config.max_batch}; split it client-side")
+            with self._lock:
+                if self._queued_rows + req.n_rows > self.config.queue_cap:
+                    self.shed[kind] += 1
+                    return None
+                req.seq = self._seq = self._seq + 1
+                self._queued_rows += req.n_rows
+                self.submitted[kind] += 1
+                heapq.heappush(self._heap, (req.deadline, req.seq, req))
+                self._read_cond.notify()
+            return req
+        if kind == "fold":
+            req = Request(kind, None, None, np.asarray(rows),
+                          now + slo / 1e3, now, 0)
+            with self._lock:
+                if len(self._folds) >= self.config.fold_queue_cap:
+                    self.shed[kind] += 1
+                    return None
+                req.seq = self._seq = self._seq + 1
+                self.submitted[kind] += 1
+                self._folds.append(req)
+                self._fold_cond.notify()
+            return req
+        raise ValueError(f"unknown request kind {kind!r}")
+
+    # ---------------------------------------------------------- batch former
+    def _form_batch(self) -> List[Request]:
+        """Take the earliest-deadline request's kind, then fill with that
+        kind's requests in deadline order up to ``max_batch`` rows, skipping
+        over other-kind entries (they keep their heap position and form the
+        next batch — per-kind deadline order is preserved, and the other
+        kind cannot starve because its earliest deadline picks the next
+        batch's kind). Caller holds the lock."""
+        if not self._heap:
+            return []
+        kind = self._heap[0][2].kind
+        batch, deferred, rows = [], [], 0
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            nxt = entry[2]
+            if nxt.kind != kind:
+                deferred.append(entry)
+                continue
+            if batch and rows + nxt.n_rows > self.config.max_batch:
+                deferred.append(entry)
+                break
+            self._queued_rows -= nxt.n_rows
+            batch.append(nxt)
+            rows += nxt.n_rows
+        for entry in deferred:
+            heapq.heappush(self._heap, entry)
+        return batch
+
+    def _execute(self, batch: List[Request]) -> None:
+        kind = batch[0].kind
+        rows = sum(r.n_rows for r in batch)
+        shape = self.config.pad_shape(rows)
+        users = np.zeros(shape, np.int64)
+        items = np.zeros(shape, np.int64)
+        off = 0
+        for r in batch:
+            users[off:off + r.n_rows] = r.users
+            if kind == "pair":
+                items[off:off + r.n_rows] = r.items
+            off += r.n_rows
+        with self.exec_lock:
+            pub = self.backend.snapshot()
+            if kind == "pair":
+                out = np.asarray(
+                    jax.block_until_ready(
+                        self.backend.predict_pairs(pub, users, items)))
+                self.nonfinite += int((~np.isfinite(out[:rows])).sum())
+            else:
+                ti, ts = self.backend.recommend_topn(pub, users,
+                                                     self.config.topn)
+                out = (np.asarray(jax.block_until_ready(ti)),
+                       np.asarray(jax.block_until_ready(ts)))
+        now = self.clock()
+        gen = pub[-1]   # both backends publish (..., generation)
+        off = 0
+        for r in batch:
+            if kind == "pair":
+                r.result = out[off:off + r.n_rows]
+            else:
+                r.result = (out[0][off:off + r.n_rows],
+                            out[1][off:off + r.n_rows])
+            off += r.n_rows
+            r.generation = gen
+            r.t_done = now
+            self.completed[kind] += 1
+            self.latencies[kind].append(now - r.t_submit)
+            r.done.set()
+            if len(self._verify_ring) < self._verify_cap:
+                self._verify_ring.append((r, r.result))
+        self.batches += 1
+        self.exec_rows += rows
+        self.pad_rows += shape - rows
+
+    def pump_reads(self, max_batches: Optional[int] = None) -> int:
+        """Drain queued reads now; returns the number of batches executed."""
+        n = 0
+        while max_batches is None or n < max_batches:
+            with self._lock:
+                batch = self._form_batch()
+            if not batch:
+                break
+            self._execute(batch)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- fold lane
+    def pump_folds(self, max_folds: Optional[int] = None) -> int:
+        """Drain queued fold-ins now (never called from the read path)."""
+        n = 0
+        while max_folds is None or n < max_folds:
+            with self._lock:
+                if not self._folds:
+                    break
+                req = self._folds.pop(0)
+            if getattr(self.backend, "serialize_folds", False):
+                with self.exec_lock:
+                    gen = self.backend.fold_in(req.rows, self.config.fold_bq)
+            else:
+                gen = self.backend.fold_in(req.rows, self.config.fold_bq)
+            now = self.clock()
+            req.result = gen
+            req.generation = gen
+            req.t_done = now
+            with self._lock:
+                self.completed["fold"] += 1
+                self.latencies["fold"].append(now - req.t_submit)
+                self.folded_rows += len(req.rows)
+                self._verify_ring.clear()   # prior generation retired
+            req.done.set()
+            n += 1
+        return n
+
+    # -------------------------------------------------------------- threaded
+    def start(self) -> None:
+        self._running = True
+
+        def read_loop():
+            while True:
+                with self._lock:
+                    while self._running and not self._heap:
+                        self._read_cond.wait(timeout=0.05)
+                    if not self._running and not self._heap:
+                        return
+                    first = self._heap[0][2] if self._heap else None
+                # brief fill wait: let the batch accumulate, bounded by
+                # max_wait and by the earliest deadline
+                if first is not None:
+                    wait = min(self.config.max_wait_ms / 1e3,
+                               max(0.0, first.deadline - self.clock()))
+                    deadline = self.clock() + wait
+                    while (self.clock() < deadline
+                           and self._queued_rows < self.config.max_batch):
+                        time.sleep(0.0005)
+                self.pump_reads(max_batches=1)
+
+        def fold_loop():
+            while True:
+                with self._lock:
+                    while self._running and not self._folds:
+                        self._fold_cond.wait(timeout=0.05)
+                    if not self._running and not self._folds:
+                        return
+                self.pump_folds(max_folds=1)
+
+        for fn, name in ((read_loop, "engine-reads"),
+                         (fold_loop, "engine-folds")):
+            t = threading.Thread(target=fn, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        with self._lock:
+            self._running = False
+            self._read_cond.notify_all()
+            self._fold_cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=30.0)
+        self._threads = []
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        offered = sum(self.submitted.values()) + sum(self.shed.values())
+        reads = sum(self.completed[k] for k in READ_KINDS)
+        return {
+            "offered": offered,
+            "submitted": dict(self.submitted),
+            "completed": dict(self.completed),
+            "shed": dict(self.shed),
+            "shed_frac": (sum(self.shed.values()) / offered
+                          if offered else 0.0),
+            "read_latency": latency_stats(
+                [t for k in READ_KINDS for t in self.latencies[k]]),
+            "fold_latency": latency_stats(self.latencies["fold"]),
+            "batches": self.batches,
+            "mean_batch_rows": (self.exec_rows / self.batches
+                                if self.batches else 0.0),
+            "pad_frac": (self.pad_rows /
+                         max(1, self.pad_rows + self.exec_rows)),
+            "nonfinite": self.nonfinite,
+            "folded_rows": self.folded_rows,
+            "generation": self.backend.generation,
+            "reads_completed": reads,
+        }
+
+    def verify_sample(self, limit: int = 16) -> Tuple[int, int]:
+        """Re-run recent completed reads SOLO against their generation and
+        count bitwise mismatches. Only requests still on the live generation
+        are checked (folds clear the ring), so the comparison is exact.
+        """
+        pub = self.backend.snapshot()
+        gen = pub[-1]
+        checked = bad = 0
+        with self._lock:
+            ring = list(self._verify_ring)[:limit]
+        for req, got in ring:
+            if req.generation != gen:
+                continue
+            checked += 1
+            shape = self.config.pad_shape(req.n_rows)
+            users = np.zeros(shape, np.int64)
+            users[:req.n_rows] = req.users
+            if req.kind == "pair":
+                items = np.zeros(shape, np.int64)
+                items[:req.n_rows] = req.items
+                ref = np.asarray(self.backend.predict_pairs(
+                    pub, users, items))[:req.n_rows]
+                ok = np.array_equal(ref, got)
+            else:
+                ti, ts = self.backend.recommend_topn(pub, users,
+                                                     self.config.topn)
+                ok = (np.array_equal(np.asarray(ti)[:req.n_rows], got[0])
+                      and np.array_equal(np.asarray(ts)[:req.n_rows],
+                                         got[1]))
+            bad += 0 if ok else 1
+        return checked, bad

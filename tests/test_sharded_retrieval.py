@@ -19,10 +19,12 @@ import numpy as np  # noqa: E402
 
 from repro.core.graph import finalize_topk  # noqa: E402
 from repro.retrieval.index import (  # noqa: E402
-    IVFSpec, append, build_index, ensure_index_capacity, recall_at_k, search)
+    IVFSpec, append, build_index, ensure_index_capacity, recall_at_k, search,
+    search_early_exit)
 from repro.retrieval.sharded import (  # noqa: E402
     append_sharded, build_index_sharded, ensure_index_capacity_sharded,
-    resolve_ivf_sharded, search_sharded, shard_index)
+    resolve_ivf_sharded, search_early_exit_sharded, search_sharded,
+    shard_index)
 
 pytestmark = pytest.mark.skipif(jax.device_count() < 8,
                                 reason="needs 8 host devices")
@@ -165,3 +167,71 @@ def test_build_index_sharded_matches_host_build(mesh):
         np.testing.assert_array_equal(np.asarray(getattr(a, name)),
                                       np.asarray(getattr(b, name)),
                                       err_msg=name)
+
+
+# -------------------------------------------------------- sharded early exit
+
+
+def test_early_exit_sharded_full_probe_bitwise(mesh):
+    """With patience past the probe count no query can retire early: the
+    sharded early-exit search must equal the single-device early-exit
+    bit-for-bit, probing every cell exactly once (the per-query psum'd
+    probe count is the proof)."""
+    rep, spec, index = _mk()
+    sidx = shard_index(index, mesh, AXES)
+    q = rep[:40]
+    sid = jnp.arange(40, dtype=jnp.int32)
+    c = spec.n_clusters
+    vr, ir, pr = search_early_exit(index, q, 9, c, "cosine", self_ids=sid,
+                                   patience=c + 1)
+    vs, is_, ps = search_early_exit_sharded(sidx, q, 9, c, mesh, AXES,
+                                            "cosine", self_ids=sid,
+                                            patience=c + 1)
+    wr, nr = _graphs(vr, ir)
+    ws, ns = _graphs(vs, is_)
+    np.testing.assert_array_equal(nr, ns)
+    np.testing.assert_array_equal(wr, ws)
+    np.testing.assert_array_equal(np.asarray(ps), np.full(40, c))
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(ps))
+
+
+def test_early_exit_sharded_reduces_probing_keeps_recall(mesh):
+    """Stability only advances on locally-scored cells, so exits need more
+    than ``patience`` cells per shard: C=64 over 8 shards gives each shard
+    8 — enough for patience=2 to retire queries before the budget."""
+    rep = jax.random.normal(jax.random.PRNGKey(0), (300, 16))
+    spec = resolve_ivf_sharded(IVFSpec(n_clusters=64), 300, 8)
+    index = build_index(rep, spec, "cosine")
+    sidx = shard_index(index, mesh, AXES)
+    q = rep[:40]
+    sid = jnp.arange(40, dtype=jnp.int32)
+    c = spec.n_clusters
+    ve, ie = search(index, q, 9, c, "cosine", self_ids=sid)  # exact ref
+    va, ia, probed = search_early_exit_sharded(sidx, q, 9, c, mesh, AXES,
+                                               "cosine", self_ids=sid,
+                                               patience=2)
+    assert float(np.mean(np.asarray(probed))) < c, \
+        "patience=2 at full probe budget retired no query early"
+    assert float(recall_at_k(ia, ie, va, ve)) >= 0.6
+    # looser patience can only probe more
+    _, _, probed4 = search_early_exit_sharded(sidx, q, 9, c, mesh, AXES,
+                                              "cosine", self_ids=sid,
+                                              patience=4)
+    assert (np.asarray(probed) <= np.asarray(probed4)).all()
+
+
+def test_early_exit_sharded_local_budget_caps_per_shard_work(mesh):
+    """At partial probe each shard scans at most ``local_budget`` ranks (a
+    full probe instead forces the exact per-shard budget ``C/S``, so the
+    cap is only meaningful when nprobe < n_clusters)."""
+    rep, spec, index = _mk()
+    sidx = shard_index(index, mesh, AXES)
+    q = rep[:40]
+    sid = jnp.arange(40, dtype=jnp.int32)
+    nprobe = spec.n_clusters - 8
+    _, _, probed = search_early_exit_sharded(sidx, q, 9, nprobe,
+                                             mesh, AXES, "cosine",
+                                             self_ids=sid, patience=99,
+                                             local_budget=2)
+    assert int(np.max(np.asarray(probed))) <= 2 * 8, \
+        "a shard probed past its local budget"
