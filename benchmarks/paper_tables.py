@@ -237,6 +237,63 @@ def foldin_vs_refit_bench(n_users=8192, n_items=512, batch=64, n_lm=32,
     return rows
 
 
+def decremental_vs_refit_bench(n_users=8192, n_items=512, batch=8, n_lm=32,
+                               bq=128, iters=3) -> List[Dict]:
+    """Beyond-paper: the write-path win — replacing ``batch`` users' rating
+    rows in place (frozen-landmark re-projection + decremental neighbor-graph
+    repair of every victim row, ``repro.mutation``) versus the synchronous
+    from-scratch refit a mutation used to force. Both warm-jitted; wall time
+    per mutation batch. ``batch=8`` is the engine write lane's minimum
+    padded shape (``_mutation_shape``, lo=8) — the steady-state online
+    write; ``bq`` covers the resulting ~``batch·(k+1)`` dirty rows in one
+    repair call. The patched state is oracle-exact (bitwise) against the
+    refit graph with the same landmarks — asserted by
+    tests/test_mutation.py, so this row only has to carry the timing."""
+    from repro import mutation
+    from repro.core import RatingMatrix
+
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 6, (n_users, n_items)).astype(np.float32)
+    r *= rng.random((n_users, n_items)) < 0.05
+    spec = LandmarkSpec(n_landmarks=n_lm, selection="popularity")
+    key = jax.random.PRNGKey(0)
+    st = fit(key, RatingMatrix(jnp.asarray(r), n_users, n_items), spec)
+    jax.block_until_ready(st.graph.weights)
+    mst = mutation.from_fitted(st)
+
+    ids = rng.choice(n_users, batch, replace=False).astype(np.int32)
+    rows = rng.integers(1, 6, (batch, n_items)).astype(np.float32)
+    rows *= rng.random((batch, n_items)) < 0.05
+    jids, jrows = jnp.asarray(ids), jnp.asarray(rows)
+    bv = jnp.int32(batch)
+
+    def patch():
+        out = mutation.update_ratings(mst, jids, jrows, bv, spec)
+        return mutation.drain_repairs(out, spec, bq)
+
+    rm = r.copy()
+    rm[ids] = rows
+    refit = lambda: fit(key, RatingMatrix(jnp.asarray(rm), n_users, n_items),
+                        spec)
+
+    out = []
+    for variant, fn in (("patch_repair", patch), ("refit", refit)):
+        w = fn()  # compile + warm
+        jax.block_until_ready(
+            w.bstate.state.graph.weights if variant == "patch_repair"
+            else w.graph.weights)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            w = fn()
+            if variant == "patch_repair":
+                jax.block_until_ready(w.bstate.state.graph.weights)
+            else:
+                jax.block_until_ready(w.graph.weights)
+        out.append({"variant": variant, "b": batch, "u": n_users,
+                    "update_s": (time.perf_counter() - t0) / iters})
+    return out
+
+
 def refresh_vs_refit_bench(u0=1024, n_items=192, waves=6, arrivals=128,
                            n_lm=16, requests=12, req_batch=256) -> List[Dict]:
     """Beyond-paper: steady-state serving with a *background* landmark refresh

@@ -133,6 +133,26 @@ def _bench_refresh_vs_refit():
           f"pair_executables={max(bg['pair_executables'], sy['pair_executables'])}")
 
 
+def _bench_decremental():
+    """`decremental_vs_refit`: in-place mutation through the write path
+    (frozen-landmark re-projection + decremental neighbor repair) vs the
+    synchronous from-scratch refit — the write-path acceptance row
+    (docs/mutation.md: >= 10x per mutation batch at u=8192, with the patched
+    state bitwise oracle-exact per tests/test_mutation.py)."""
+    rows = paper_tables.decremental_vs_refit_bench()
+    by = {r["variant"]: r for r in rows}
+    pa, rf = by["patch_repair"], by["refit"]
+    speedup = rf["update_s"] / max(pa["update_s"], 1e-9)
+    assert speedup >= 10.0, (
+        f"decremental repair {pa['update_s']:.3f}s vs refit "
+        f"{rf['update_s']:.3f}s — {speedup:.1f}x < the 10x write-path "
+        "acceptance bar")
+    _emit(f"decremental_vs_refit[u={pa['u']},b={pa['b']}]",
+          pa["update_s"] * 1e6,
+          f"patch_repair_s={pa['update_s']:.4f};refit_s={rf['update_s']:.4f};"
+          f"speedup={speedup:.1f}x")
+
+
 def _bench_engine():
     """`engine_vs_waves`: the continuous micro-batching request engine vs
     the synchronous wave treatment on the same offered traffic — the
@@ -291,6 +311,10 @@ def main(argv=None) -> None:
                     help="emit only the engine_vs_waves row (the CI "
                     "request-path engine bench step; asserts the >= 2x "
                     "sustained-QPS acceptance internally)")
+    ap.add_argument("--mutation-only", action="store_true",
+                    help="emit only the decremental_vs_refit row (the CI "
+                    "write-path bench step; asserts the >= 10x patch-repair "
+                    "acceptance internally)")
     ap.add_argument("--scale", choices=("ci", "full"), default="ci",
                     help="geometry for the ivf_sharded family: 'full' is "
                     "the committed BENCH_retrieval.json acceptance scale "
@@ -325,6 +349,10 @@ def main(argv=None) -> None:
         # explicitly selected: no guard — the engine's internal acceptance
         # asserts (>= 2x QPS, bitwise micro-batching) must fail the CI step
         _bench_engine()
+    elif args.mutation_only:
+        # explicitly selected: no guard — the >= 10x patch-repair assert
+        # must fail the CI write-path step
+        _bench_decremental()
     else:
         datasets = ["movielens100k", "netflix100k"]
         if args.full:
@@ -351,6 +379,8 @@ def main(argv=None) -> None:
         _guard("refresh_vs_refit", _bench_refresh_vs_refit)
         # Beyond-paper: micro-batching request engine vs synchronous waves
         _guard("engine_vs_waves", _bench_engine)
+        # Beyond-paper: decremental write-path repair vs from-scratch refit
+        _guard("decremental_vs_refit", _bench_decremental)
         # Beyond-paper: IVF candidate generation vs the streaming scan
         _guard("ivf_vs_streaming", _bench_ivf_vs_streaming)
         # Beyond-paper: mesh-sharded fold-in vs single-device

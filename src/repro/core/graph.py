@@ -87,6 +87,129 @@ def finalize_topk(vals: jax.Array, idx: jax.Array) -> NeighborGraph:
     )
 
 
+def canonical_topk(vals: jax.Array, ids: jax.Array, k: int,
+                   rank: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Lexicographic (value desc, rank asc) top-k over candidate columns.
+
+    Every graph list in this repo is stored in that canonical order: the
+    streaming/dense/bucketed builds lay candidates out in ascending-id order,
+    so ``lax.top_k``'s positional tie-break IS the id-ascending tie-break.
+    When merged candidates are *not* in ascending-id order (a mutated row's
+    id can be smaller than the incumbent list's ids — ``repro.mutation``;
+    a cross-shard candidate gather — ``extend_neighbor_graph_sharded``),
+    positional top-k would break exact-weight ties wrongly. Two stable
+    argsorts (rank first, then value) emulate the lexicographic top-k
+    instead. ``rank`` defaults to ``ids``; sharded callers pass logical row
+    ranks so ties canonicalize across the id bijection.
+    """
+    if rank is None:
+        rank = ids
+    m = vals.shape[1]
+    if m < k:
+        pad = k - m
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)))
+        rank = jnp.pad(rank, ((0, 0), (0, pad)),
+                       constant_values=jnp.iinfo(jnp.int32).max)
+    ord1 = jnp.argsort(rank, axis=1)
+    v1 = jnp.take_along_axis(vals, ord1, axis=1)
+    i1 = jnp.take_along_axis(ids, ord1, axis=1)
+    sel = jnp.argsort(-v1, axis=1)[:, :k]
+    return (jnp.take_along_axis(v1, sel, axis=1),
+            jnp.take_along_axis(i1, sel, axis=1))
+
+
+def merge_canonical_topk(av: jax.Array, ai: jax.Array,
+                         bv: jax.Array, bi: jax.Array, k: int,
+                         a_rank: Optional[jax.Array] = None,
+                         b_rank: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Exact lexicographic top-k of two *already canonical* candidate lists.
+
+    ``(av, ai)`` is (rows, ka) and ``(bv, bi)`` is (rows, kb), each in
+    canonical (value desc, rank asc) order. The merged position of every
+    element is its own index plus the number of elements of the *other*
+    list that strictly precede it — the textbook merge-by-rank-count, one
+    (rows, ka, kb) boolean compare each way plus a scatter, no sort. On the
+    skinny merges ``repro.mutation`` runs per write batch this is an order
+    of magnitude cheaper than :func:`canonical_topk`'s two full-width
+    stable argsorts (XLA's variadic sort is the write path's bottleneck on
+    CPU hosts).
+
+    Exactness requires a strict order across the two lists for entries that
+    can reach the top-k: no exact cross-list ``(value, rank)`` tie (call
+    sites guarantee it — a patched row's incumbent list is id-disjoint from
+    the update batch, and ``-inf``-masked entries never outrank a stored
+    finite weight). Cross-list ties among entries that *cannot* reach the
+    top-k (two ``-inf`` pads) are harmless: within-list order is preserved
+    by construction, and :func:`finalize_topk` collapses any selected pad
+    to the inert (0, 0.0) slot regardless of which one won.
+    """
+    if a_rank is None:
+        a_rank = ai
+    if b_rank is None:
+        b_rank = bi
+    rows, ka = av.shape
+    kb = bv.shape[1]
+    if ka + kb < k:  # degenerate: not enough candidates to fill k slots
+        return canonical_topk(jnp.concatenate([av, bv], axis=1),
+                              jnp.concatenate([ai, bi], axis=1), k,
+                              rank=jnp.concatenate([a_rank, b_rank], axis=1))
+    # x ≻ y  ⇔  value greater, or equal value with smaller rank
+    b_before_a = (bv[:, :, None] > av[:, None, :]) | (
+        (bv[:, :, None] == av[:, None, :])
+        & (b_rank[:, :, None] < a_rank[:, None, :]))  # (rows, kb, ka)
+    a_before_b = (av[:, :, None] > bv[:, None, :]) | (
+        (av[:, :, None] == bv[:, None, :])
+        & (a_rank[:, :, None] < b_rank[:, None, :]))  # (rows, ka, kb)
+    pos_a = jnp.arange(ka) + jnp.sum(b_before_a, axis=1)
+    pos_b = jnp.arange(kb) + jnp.sum(a_before_b, axis=1)
+    # invert the position permutation with a gather, not a scatter (XLA's
+    # CPU scatter is a serial loop): slot s takes the unique element whose
+    # merged position is s — positions are a bijection onto 0..ka+kb-1, so
+    # every slot < k matches exactly once
+    pos = jnp.concatenate([pos_a, pos_b], axis=1)
+    mv = jnp.concatenate([av, bv], axis=1)
+    mi = jnp.concatenate([ai, bi], axis=1)
+    slot = jnp.argmax(pos[:, None, :] == jnp.arange(k)[None, :, None], axis=2)
+    return (jnp.take_along_axis(mv, slot, axis=1),
+            jnp.take_along_axis(mi, slot, axis=1))
+
+
+def evict_neighbors(graph: NeighborGraph, dead: jax.Array,
+                    row_rank: Optional[jax.Array] = None
+                    ) -> Tuple[NeighborGraph, jax.Array]:
+    """Remove every citation of a ``dead`` row id from all neighbor lists.
+
+    ``dead`` is a (capacity,) bool over the graph's id space (tombstoned or
+    mutated rows). Dead entries are masked to -inf, lists are re-sorted
+    canonically ((value desc, rank asc) — surviving order is unchanged
+    because lists are already canonical), and emptied slots become the inert
+    (0, 0.0) convention via :func:`finalize_topk`. Returns ``(graph, hit)``
+    where ``hit`` is a (capacity,) bool marking rows that lost at least one
+    entry — those rows' k-th neighbor is now unknown (the old (k+1)-th
+    candidate is not stored) and the caller must schedule a repair rescan
+    (``repro.mutation``'s dirty bitmap).
+
+    Only O(capacity·k) gathers run — never a row-space product.
+    """
+    cited_dead = dead[graph.indices]
+    # NOTE: the inert (0, 0.0) convention slot cites id 0, so a dead row 0
+    # flags every row holding an inert slot — a spurious-but-safe hit (the
+    # rescan reproduces the inert slot). A weight==0 filter would instead
+    # let a *genuine* zero-similarity citation of a dead id survive, which
+    # breaks the tombstone-absence guarantee; zero-rep users make exact-0.0
+    # weights common, so no filter.
+    hit = jnp.any(cited_dead, axis=1)
+    w = jnp.where(cited_dead, -jnp.inf, graph.weights)
+    rank = graph.indices if row_rank is None else row_rank[graph.indices]
+    v, i = canonical_topk(w, graph.indices, graph.k, rank=rank)
+    g = finalize_topk(v, i)
+    return NeighborGraph(jnp.where(hit[:, None], g.indices, graph.indices),
+                         jnp.where(hit[:, None], g.weights, graph.weights)), hit
+
+
 def filter_self_from_topk(vals: jax.Array, idx: jax.Array, row_ids: jax.Array,
                           k: int) -> Tuple[jax.Array, jax.Array]:
     """Drop each row's own id from an inclusive (U, k+1) top-k list.

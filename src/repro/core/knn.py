@@ -36,7 +36,7 @@ EPS = 1e-8
 
 
 def _mask_padded_rows(idx: jax.Array, w: jax.Array, n_valid,
-                      shard_cap=None) -> jax.Array:
+                      shard_cap=None, tomb=None) -> jax.Array:
     """Gathered neighbor weights with padded-row ids zeroed (bucket padding).
     Operates on the (B, k) query slice — never on the full (capacity, k)
     graph — so the request-path cost stays O(B·k).
@@ -45,7 +45,15 @@ def _mask_padded_rows(idx: jax.Array, w: jax.Array, n_valid,
     scalar ``n_valid``, ids ``>= n_valid`` are padding (single-device
     BucketedState). With ``shard_cap`` set (static) ``n_valid`` is the (S,)
     per-shard fill of a block-partitioned ShardedLandmarkState and id
-    ``s*C + slot`` is valid iff ``slot < n_valid[s]``."""
+    ``s*C + slot`` is valid iff ``slot < n_valid[s]``.
+
+    ``tomb`` is an optional (capacity,) bool of tombstoned rows (GDPR-removed
+    users, ``repro.mutation``): a neighbor whose tomb bit is set contributes
+    nothing to Eq. (1) even if its graph citation has not been repaired yet.
+    Only the gathered (B, k) slice ``tomb[idx]`` ever exists on the request
+    path — never a row-space product."""
+    if tomb is not None:
+        w = jnp.where(tomb[idx], 0.0, w)
     if n_valid is None:
         return w
     if shard_cap is None:
@@ -169,6 +177,7 @@ def recommend_topn_graph(
     *,
     n_valid=None,  # () int32 (or (S,) with shard_cap): bucket-padding mask
     shard_cap=None,  # static per-shard capacity of a sharded graph
+    tomb=None,  # (capacity,) bool: tombstoned rows never contribute
 ):
     """Top-N unseen items per query user — the serve-path recommendation op.
 
@@ -183,7 +192,7 @@ def recommend_topn_graph(
     mask, means, centered = _center(ratings)
     idx = graph.indices[users]  # (B, k)
     w = _mask_padded_rows(idx, graph.weights[users], n_valid,
-                          shard_cap).astype(centered.dtype)
+                          shard_cap, tomb).astype(centered.dtype)
     preds = _block_predict(idx, w, centered, mask, means[users])  # (B, P)
     preds = jnp.where(mask[users] > 0, -jnp.inf, preds)  # never re-recommend
     scores, items = jax.lax.top_k(preds, n)
@@ -200,6 +209,7 @@ def predict_pairs_graph(
     *,
     n_valid=None,  # () int32 (or (S,) with shard_cap): bucket-padding mask
     shard_cap=None,  # static per-shard capacity of a sharded graph
+    tomb=None,  # (capacity,) bool: tombstoned rows never contribute
 ) -> jax.Array:
     """``predict_pairs`` from a NeighborGraph — no (U, U) array anywhere.
 
@@ -207,7 +217,8 @@ def predict_pairs_graph(
     """
     mask, means, _ = _center(ratings)
     idx_b = graph.indices[users]  # (B, k)
-    w_b = _mask_padded_rows(idx_b, graph.weights[users], n_valid, shard_cap)
+    w_b = _mask_padded_rows(idx_b, graph.weights[users], n_valid, shard_cap,
+                            tomb)
 
     def one(idx, w, u, v):
         return _pair_predict(idx, w, u, v, ratings, mask, means)

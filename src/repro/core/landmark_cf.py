@@ -228,6 +228,7 @@ def fold_in_sharded(
     b_valid: jax.Array,  # () int32 real rows in the batch
     target_shard: jax.Array,  # () int32 shard that receives the batch
     spec: LandmarkSpec,
+    landmarks: jax.Array = None,  # (n, P) frozen basis override (mutation path)
 ) -> ShardedLandmarkState:
     """Mesh-wide ``fold_in_bucketed``: the whole batch lands on one shard.
 
@@ -257,7 +258,8 @@ def fold_in_sharded(
     q_valid = (jnp.arange(bq) < b_valid)[:, None]
     new_ratings = jnp.where(q_valid, new_ratings, 0.0)
 
-    landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen at fit
+    if landmarks is None:
+        landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen at fit
     new_rep = masked_similarity(new_ratings, landmarks, spec.d1)  # (bq, n)
     new_rep = jnp.where(q_valid, new_rep, 0.0)
 

@@ -124,6 +124,22 @@ class NeighborGraph:
         return NeighborGraph(self.indices.astype(jnp.int32),
                              self.weights.astype(jnp.float32))
 
+    def remap(self, table: jax.Array) -> "NeighborGraph":
+        """Rewrite neighbor ids through an old-id → new-id ``table``.
+
+        Used when the row space is physically re-ordered (tombstone
+        compaction in ``repro.mutation``, shard repacks). Inert (0, 0.0)
+        slots keep the (0, 0.0) convention even when old row 0 moved or was
+        deleted — a *genuine* zero-weight citation of old row 0 maps through
+        the table like any other entry, which is safe because a deleted row
+        is never genuinely cited by the time a remap runs (citations are
+        evicted first). Weights are untouched: similarity values are
+        row-pair-local, so moving rows never changes them.
+        """
+        inert = (self.indices == 0) & (self.weights == 0)
+        mapped = table[self.indices].astype(self.indices.dtype)
+        return NeighborGraph(jnp.where(inert, 0, mapped), self.weights)
+
     @staticmethod
     def from_dense_sims(sims: jax.Array, k: int, exclude_self: bool = True
                         ) -> "NeighborGraph":

@@ -207,6 +207,54 @@ def drifting_ratings(
     return (vals * rated).astype(np.float32)
 
 
+def mutation_events(
+    seed: int,
+    wave: int,
+    n_users: int,
+    n_items: int,
+    *,
+    n_events: int = 16,
+    rerate_frac: float = 0.5,
+    unrate_frac: float = 0.25,
+    delete_frac: float = 0.25,
+    density: float = 0.25,
+) -> Dict[str, np.ndarray]:
+    """Write-path event stream for the mutation subsystem (re-rate / un-rate
+    / delete), deterministic in ``(seed, wave)`` like every generator here.
+
+    Each wave draws ``n_events`` events over distinct users sampled from
+    ``[0, n_users)`` (the caller's *logical* id universe at that wave — pass
+    the current population, translate/clamp as users are deleted). Event
+    kinds are drawn per-event from the (rerate, unrate, delete) fractions,
+    normalized. Re-rates emit a full replacement rating row at the given
+    density; un-rates emit a replacement row with a random ~half of a fresh
+    row's entries cleared (both are ``"update"`` requests — the replacement-
+    row contract makes un-rating just a sparser update); deletes carry no
+    row.
+
+    Returns ``{"kinds", "users", "rows"}``: kinds (E,) int8 (0 = re-rate,
+    1 = un-rate, 2 = delete), users (E,) int64 distinct ids, rows
+    (E, n_items) float32 replacement rows (zero rows for deletes).
+    """
+    if n_events > n_users:
+        raise ValueError(f"n_events={n_events} > n_users={n_users}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, wave, 7]))
+    p = np.asarray([rerate_frac, unrate_frac, delete_frac], np.float64)
+    if p.sum() <= 0:
+        raise ValueError("at least one event fraction must be positive")
+    p = p / p.sum()
+    kinds = rng.choice(3, size=n_events, p=p).astype(np.int8)
+    users = rng.choice(n_users, size=n_events, replace=False).astype(np.int64)
+    rated = rng.random((n_events, n_items)) < density
+    vals = np.clip(np.rint(3.0 + rng.normal(0.0, 1.2, (n_events, n_items))),
+                   1, 5)
+    rows = (vals * rated).astype(np.float32)
+    thin = rng.random((n_events, n_items)) < 0.5
+    rows[kinds == 1] *= thin[kinds == 1]
+    rows[kinds == 2] = 0.0
+    return {"kinds": kinds, "users": users, "rows": rows}
+
+
 # --------------------------------------------------------------------- recsys
 def fm_train_batch(seed, step, batch, field_vocabs) -> Dict[str, np.ndarray]:
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))

@@ -1220,11 +1220,14 @@ def _serve_cf_engine(args):
     p50/p95/p99 and shed rate, and ``--smoke`` asserts the SLOs under load:
     QPS > 0, zero non-finite predictions, bitwise-vs-solo verification,
     recall >= 0.95 (with ``--retrieval ivf``), and the bounded-compile and
-    no-materialization guarantees."""
+    no-materialization guarantees. ``--mutations`` additionally opens the
+    write path (docs/mutation.md): update/remove traffic on the write lane,
+    an engine-fed drift monitor, and a policy-fired compacting refresh."""
     from repro.core import LandmarkSpec, RatingMatrix, fit, knn
     from repro.lifecycle import buckets
-    from repro.serving import (EngineConfig, LocalBackend, RequestEngine,
-                               ShardedBackend)
+    from repro.serving import (EngineConfig, LocalBackend,
+                               MutableLocalBackend, MutableShardedBackend,
+                               RequestEngine, ShardedBackend)
     from repro.serving import router as srouter
     from repro.serving.stats import latency_stats
 
@@ -1236,6 +1239,18 @@ def _serve_cf_engine(args):
         args.duration = min(args.duration, 4.0)
     rng = np.random.default_rng(0)
     n0 = args.users  # load targets the base population: valid in every gen
+    mutations = bool(args.mutations)
+    if mutations:
+        from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
+        from repro.core.similarity import masked_similarity
+        from repro.data.synthetic import mutation_events
+        from repro.lifecycle import monitor, policy
+        rspec = SMOKE_REFRESH if args.smoke else REFRESH
+        if args.smoke:
+            # a CI-length window deletes only a few percent of the base
+            # population; drop the compaction gate so the smoke still
+            # exercises the policy-fired refresh + tombstone compaction
+            rspec = dataclasses.replace(rspec, max_tombstone_frac=0.01)
 
     r0 = _synth_ratings(rng, args.users, args.items)
     t0 = time.perf_counter()
@@ -1273,11 +1288,12 @@ def _serve_cf_engine(args):
         u_per = -(-args.users // n_shards)
         id_shard = (np.arange(args.users) // u_per).astype(np.int32)
         id_slot = (np.arange(args.users) % u_per).astype(np.int32)
-        backend = ShardedBackend(sst, id_shard, id_slot, spec,
-                                 min_bucket=min_shard_bucket,
-                                 growth=args.growth,
-                                 warm_shapes=cfg.batch_shapes(),
-                                 warm_topn=args.topn)
+        backend_cls = MutableShardedBackend if mutations else ShardedBackend
+        backend = backend_cls(sst, id_shard, id_slot, spec,
+                              min_bucket=min_shard_bucket,
+                              growth=args.growth,
+                              warm_shapes=cfg.batch_shapes(),
+                              warm_topn=args.topn)
         # one-time jaxpr proof: the routed request path materializes no
         # replicated (S*C, .) row-space array and no (b, U) score tensor
         n_avals, offenders = srouter.materialization_check(
@@ -1285,16 +1301,29 @@ def _serve_cf_engine(args):
         print(f"router materialization check: {n_avals} avals scanned, "
               f"{len(offenders)} offenders")
         assert not offenders, offenders
-        # full-batch bitwise: routed == the single-device reference
+        # full-batch bitwise: routed == the single-device reference. In
+        # --mutations mode the reference is the single-device *mutable*
+        # read path: the routed side threads the (all-false) tombstone
+        # operand, which re-fuses the pair reduction — its bitwise peer is
+        # the solo path with the same operand, not the tomb-less one.
         shadow = buckets.from_state(st, args.min_bucket, args.growth)
         pu = rng.integers(0, n0, cfg.max_batch)
         pi = rng.integers(0, args.items, cfg.max_batch)
         routed = np.asarray(backend.predict_pairs(backend.snapshot(), pu, pi))
-        ref = np.asarray(buckets.predict_pairs(
-            shadow, jnp.asarray(pu, jnp.int32), jnp.asarray(pi, jnp.int32)))
         ri, rs = backend.recommend_topn(backend.snapshot(), pu, args.topn)
-        fi, fs = buckets.recommend_topn(shadow, jnp.asarray(pu, jnp.int32),
-                                        n=args.topn)
+        if mutations:
+            from repro import mutation as _mut
+            sh_m = _mut.from_bucketed(shadow)
+            ref = np.asarray(_mut.predict_pairs(
+                sh_m, jnp.asarray(pu, jnp.int32), jnp.asarray(pi, jnp.int32)))
+            fi, fs = _mut.recommend_topn(sh_m, jnp.asarray(pu, jnp.int32),
+                                         n=args.topn)
+        else:
+            ref = np.asarray(buckets.predict_pairs(
+                shadow, jnp.asarray(pu, jnp.int32),
+                jnp.asarray(pi, jnp.int32)))
+            fi, fs = buckets.recommend_topn(shadow, jnp.asarray(pu, jnp.int32),
+                                            n=args.topn)
         same = (np.array_equal(routed, ref)
                 and np.array_equal(np.asarray(ri), np.asarray(fi))
                 and np.array_equal(np.asarray(rs), np.asarray(fs)))
@@ -1305,10 +1334,11 @@ def _serve_cf_engine(args):
                     "topn": srouter._recommend_topn_routed}
     else:
         bst = buckets.from_state(st, args.min_bucket, args.growth)
-        backend = LocalBackend(bst, spec, min_bucket=args.min_bucket,
-                               growth=args.growth,
-                               warm_shapes=cfg.batch_shapes(),
-                               warm_topn=args.topn)
+        backend_cls = MutableLocalBackend if mutations else LocalBackend
+        backend = backend_cls(bst, spec, min_bucket=args.min_bucket,
+                              growth=args.growth,
+                              warm_shapes=cfg.batch_shapes(),
+                              warm_topn=args.topn)
         families = {"pair": knn.predict_pairs_graph,
                     "topn": knn.recommend_topn_graph}
     cache0 = {name: fn._cache_size() for name, fn in families.items()}
@@ -1385,6 +1415,62 @@ def _serve_cf_engine(args):
               f"C={index.n_clusters} nprobe={retrieval.nprobe} "
               f"pre-load recall@{kk}={rec0:.3f}")
 
+    if mutations:
+        # engine-mode drift monitor (docs/mutation.md): the reservoir, the
+        # fold-in volume, and the tombstone fraction all accumulate from
+        # LIVE engine traffic in the load loop below; the policy verdict is
+        # evaluated once the window drains (writes are async — a mid-window
+        # refresh would renumber rows under queued folds)
+        base_cov = float(monitor.batch_coverage(
+            st.representation, jnp.ones((n0,), jnp.float32)))
+        mon = monitor.init_monitor(rspec.reservoir, n0, base_cov)
+        pol = policy.PolicyState(generation=backend.generation)
+        mkeys = iter(jax.random.split(jax.random.PRNGKey(11), 512))
+        alive = np.ones(n0, bool)  # host view of not-yet-deleted base users
+        removed_ids: list = []
+        # pre-warm the monitor-feed executables outside the timed window:
+        # the feed runs on the load-loop thread, and a ~2s in-window compile
+        # would starve every cadence behind it (folds, mutation waves)
+        warm_rep = masked_similarity(
+            jnp.zeros((args.foldin, args.items), jnp.float32),
+            backend._pub[0].landmarks, spec.d1)
+        jax.block_until_ready(
+            monitor.observe_fold_in(mon, warm_rep, jnp.int32(0)).coverage)
+        jax.block_until_ready(_offer_holdout(
+            mon, rng, next(mkeys), 0, np.zeros(0, np.int32),
+            np.zeros(0, np.int32), np.zeros(0, np.float32),
+            rspec.reservoir).res_users)
+        def _drift_snapshot():
+            if sharded:
+                msst, mid_shard, mid_slot, _ = backend._pub
+                idm = np.zeros(msst.shard_count * msst.capacity, np.int32)
+                sid = mid_shard * msst.capacity + mid_slot
+                idm[:len(sid)] = sid
+                return monitor.holdout_snapshot_sharded(
+                    mon, msst.sstate, jnp.asarray(idm), tomb=msst.tomb,
+                    tombstone_frac=backend.tombstone_frac)
+            mst = backend._pub[0]
+            return monitor.holdout_snapshot(
+                mon, mst.bstate, tomb=mst.tomb,
+                tombstone_frac=backend.tombstone_frac)
+
+        def _remap_reservoir(mon, table):
+            """Renumber reservoir triples across a swap; deleted users'
+            withheld ratings leave the holdout with them."""
+            filled = int(mon.res_filled)
+            ru = np.asarray(mon.res_users)[:filled]
+            ri = np.asarray(mon.res_items)[:filled]
+            rr = np.asarray(mon.res_ratings)[:filled]
+            nu = table[ru]
+            keep = nu >= 0
+            k = int(keep.sum())
+            cap_r = mon.res_users.shape[0]
+            pad = lambda src, dt: jnp.asarray(np.concatenate(
+                [src[keep].astype(dt), np.zeros(cap_r - k, dt)]))
+            return dataclasses.replace(
+                mon, res_users=pad(nu, np.int32), res_items=pad(ri, np.int32),
+                res_ratings=pad(rr, np.float32), res_filled=jnp.int32(k))
+
     eng = RequestEngine(backend, cfg, clock=time.perf_counter)
     # warm one executable per (batch shape, kind) — the compile budget the
     # run is held to (x live buckets; folds may grow the bucket once)
@@ -1400,6 +1486,27 @@ def _serve_cf_engine(args):
     backend.fold_in(np.asarray(_synth_ratings(rng, args.foldin, args.items)),
                     cfg.fold_bq)
     pub = backend.snapshot()
+    if mutations:
+        # pre-warm the write lane itself — AFTER the fold pre-warm, so the
+        # executables compile at the regrown capacity every in-window write
+        # will run at (the fold above is what crosses the bucket boundary).
+        # A bitwise no-op self-update (rows rewritten with their current
+        # values — the decremental repair recomputes identical graph rows)
+        # compiles the update + repair + publish executables, and a
+        # zero-valid remove compiles the tombstone scatter; the first
+        # in-window mutation otherwise pays those compiles while reads
+        # queue behind the mesh exec lock
+        warm_ids = np.arange(8)
+        if sharded:
+            msst0, wsh, wsl, _ = backend._pub
+            warm_rows = np.asarray(msst0.sstate.state.ratings)[
+                wsh[warm_ids] * msst0.capacity + wsl[warm_ids]]
+        else:
+            warm_rows = np.asarray(
+                backend._pub[0].bstate.state.ratings)[warm_ids]
+        backend.apply_update(warm_ids, warm_rows)
+        backend.apply_remove(np.zeros(0, np.int64))
+        pub = backend.snapshot()
 
     # closed-loop synchronous baseline: the wave treatment — one padded
     # jitted call per request, each waiting for the previous; its capacity
@@ -1432,10 +1539,43 @@ def _serve_cf_engine(args):
     next_fold = t_start + fold_every * 0.6
     next_probe = t_start + args.duration / 6.0
     folds_sent = 0
+    if mutations:
+        mut_every = args.duration / 4.0
+        next_mut = t_start + mut_every * 0.4
+        mut_wave = 0
+        next_start = backend.n_users  # logical id of the next folded row
     while True:
         now = time.perf_counter()
         if now >= t_stop:
             break
+        if mutations and now >= next_mut:
+            # mutation traffic: a deterministic event wave (re-rate /
+            # un-rate / delete) against still-live base users, riding the
+            # write lane alongside the folds. Checked before arrivals — at
+            # saturating --rate the arrivals branch never yields otherwise.
+            # Waves stay <= 8 events so every update/remove batch pads to
+            # the one pre-warmed mutation shape (no in-window compiles).
+            ev = mutation_events(13, mut_wave, n0, args.items,
+                                 n_events=min(8, max(2, n0 // 8)),
+                                 rerate_frac=0.3, unrate_frac=0.2,
+                                 delete_frac=0.5)
+            mut_wave += 1
+            sel = alive[ev["users"]]
+            upd = sel & (ev["kinds"] != 2)
+            rem = sel & (ev["kinds"] == 2)
+            if upd.any():
+                r = eng.submit("update", users=ev["users"][upd],
+                               rows=ev["rows"][upd])
+                if r is not None:
+                    reqs.append(r)
+            if rem.any():
+                r = eng.submit("remove", users=ev["users"][rem])
+                if r is not None:
+                    reqs.append(r)
+                    alive[ev["users"][rem]] = False
+                    removed_ids.extend(int(u) for u in ev["users"][rem])
+            next_mut += mut_every
+            continue
         if now >= next_arr:
             m = int(rq.integers(4, 17))
             uu = rq.integers(0, n0, m)
@@ -1449,7 +1589,23 @@ def _serve_cf_engine(args):
             next_arr += rq.exponential(1.0 / rate)
             continue
         if now >= next_fold and folds_sent < len(fold_batches):
-            eng.submit("fold", rows=fold_batches[folds_sent])
+            if mutations:
+                # withhold a holdout slice for the drift reservoir; logical
+                # ids are cumulative append order (the write lane is FIFO,
+                # so drain order == submission order)
+                train, hrows, hcols, hvals = _withhold(
+                    rq, fold_batches[folds_sent], rspec.holdout_frac)
+                eng.submit("fold", rows=train)
+                mon = _offer_holdout(mon, rng, next(mkeys), next_start,
+                                     hrows, hcols, hvals, rspec.reservoir)
+                mon = monitor.observe_fold_in(
+                    mon,
+                    masked_similarity(jnp.asarray(train),
+                                      backend._pub[0].landmarks, spec.d1),
+                    jnp.int32(len(train)))
+                next_start += len(train)
+            else:
+                eng.submit("fold", rows=fold_batches[folds_sent])
             folds_sent += 1
             next_fold += fold_every
             continue
@@ -1499,6 +1655,57 @@ def _serve_cf_engine(args):
           f"(+{stats['folded_rows']} users -> gen {stats['generation']}, "
           f"U={backend.n_users}) fold {stats['fold_latency'].brief()} — "
           f"{overlap}")
+    if mutations:
+        print(f"write lane: {mut_wave} event waves -> "
+              f"updates={stats['completed']['update']} "
+              f"removes={stats['completed']['remove']} "
+              f"(mutated_rows={stats['mutated_rows']}, "
+              f"repaired_rows={stats['repaired_rows']}, "
+              f"tombstone_frac={stats['tombstone_frac']:.3f})")
+        # pre-compaction bar: no live row's neighbor list cites a dead row
+        if sharded:
+            msst = backend._pub[0]
+            g = msst.sstate.state.graph
+            tombv = np.asarray(msst.tomb)
+            nvv = np.asarray(msst.sstate.n_valid)
+            gid = np.arange(len(tombv))
+            row_valid = (gid % msst.capacity) < nvv[gid // msst.capacity]
+        else:
+            mstt = backend._pub[0]
+            g = mstt.bstate.state.graph
+            tombv = np.asarray(mstt.tomb)
+            row_valid = np.arange(len(tombv)) < int(mstt.bstate.n_valid)
+        gi, gw = np.asarray(g.indices), np.asarray(g.weights)
+        cites_dead = (tombv[gi] & (gw != 0))[row_valid & ~tombv]
+        assert not cites_dead.any(), "live graph row cites a tombstoned row"
+        assert int(backend._pub[0].dirty_count()) == 0, (
+            "write lane published with unrepaired rows")
+        # the drift monitor's verdict on the window's live traffic
+        snap = _drift_snapshot()
+        if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
+            pol.base_mae = snap.mae
+        fire, reasons = policy.decide(pol, rspec, snap)
+        compact = policy.should_compact_tombstones(rspec, snap.tombstone_frac)
+        print(f"drift monitor: mae={snap.mae:.3f} "
+              f"holdout={snap.holdout_count} "
+              f"foldin_frac={snap.foldin_frac:.2f} "
+              f"tombstone_frac={snap.tombstone_frac:.3f} -> fire={fire} "
+              f"({','.join(reasons) if reasons else 'healthy'}) "
+              f"compact={compact}")
+        if fire or compact:
+            if fire:
+                policy.on_fire(pol)
+            n_pre = backend.n_users
+            with eng.exec_lock:
+                gen_new, table = backend.refresh()
+            mon = _remap_reservoir(mon, table)
+            post = _drift_snapshot()
+            policy.on_swap(pol, gen_new, post.mae, rspec)
+            print(f"refresh swap: gen {gen_new}, compacted "
+                  f"{int(np.sum(table[:n_pre] < 0))} tombstones, post-swap "
+                  f"mae={post.mae:.3f} "
+                  f"tombstone_frac={post.tombstone_frac:.3f}")
+            assert backend.tombstone_frac == 0.0, "compaction left tombstones"
     print(f"bitwise vs solo replay: {checked} requests re-run, "
           f"{bad} mismatches | non-finite predictions: {stats['nonfinite']}")
     caps = sorted(backend.caps_used)
@@ -1526,6 +1733,13 @@ def _serve_cf_engine(args):
             "SLO under load")
         assert stats["completed"]["fold"] >= 1, (
             "smoke run must exercise the fold lane")
+        if mutations:
+            assert stats["completed"]["update"] >= 1, (
+                "smoke run drained no in-place updates")
+            assert stats["completed"]["remove"] >= 1, (
+                "smoke run drained no removals")
+            assert removed_ids and stats["tombstone_frac"] > 0, (
+                "mutation stream produced no tombstones")
         if use_ivf:
             assert recalls and float(np.mean(recalls)) >= IVF_RECALL_SLO, (
                 f"ivf recall under load "
@@ -1622,7 +1836,17 @@ def main(argv=None):
     ap.add_argument("--duration", type=float, default=8.0,
                     help="engine: load-generation window in seconds "
                     "(smoke clamps to 4)")
+    ap.add_argument("--mutations", action="store_true",
+                    help="engine: open the write path — in-place rating "
+                    "updates and GDPR removals ride the async write lane "
+                    "alongside fold-ins, an engine-fed drift monitor "
+                    "accumulates holdout/volume/tombstone stats from live "
+                    "traffic, and the lifecycle policy's verdict can fire a "
+                    "tombstone-compacting refresh (docs/mutation.md)")
     args = ap.parse_args(argv)
+    if args.mutations and not args.engine:
+        raise SystemExit("--mutations rides the request engine's write "
+                         "lane; add --engine (--workload cf)")
     if args.retrieval == "ivf" and not (args.lifecycle or args.engine):
         raise SystemExit("--retrieval ivf runs on the lifecycle replay or "
                          "the request engine (--workload cf --lifecycle / "

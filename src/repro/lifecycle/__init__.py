@@ -52,6 +52,7 @@ from .policy import (
     RefreshSpec,
     decide,
     should_compact,
+    should_compact_tombstones,
     should_rebalance,
 )
 from .refresh import RefreshManager
@@ -86,6 +87,7 @@ __all__ = [
     "decide",
     "shard_skew",
     "should_compact",
+    "should_compact_tombstones",
     "should_rebalance",
     "RefreshManager",
 ]

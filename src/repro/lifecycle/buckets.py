@@ -149,6 +149,7 @@ def fold_in_bucketed(
     new_ratings: jax.Array,  # (bq, P) batch bucket; rows >= b_valid are filler
     b_valid: jax.Array,  # () int32 real rows in the batch
     spec: LandmarkSpec,
+    landmarks: jax.Array = None,  # (n, P) frozen basis override (mutation path)
 ) -> BucketedState:
     """Shape-stable ``fold_in``: fill padded slots instead of growing arrays.
 
@@ -164,6 +165,12 @@ def fold_in_bucketed(
     copy of the state in HBM traffic. Callers must treat the passed-in state
     as consumed (every in-repo caller rebinds ``bstate =``). On backends
     without donation (CPU) this is a no-op.
+
+    ``landmarks`` overrides the projection basis. The default re-slices
+    ``st.ratings[landmark_idx]`` — correct while rating rows are immutable,
+    but ``repro.mutation`` updates and zeroes rating rows in place, so the
+    mutable path passes its frozen (n, P) snapshot instead (the basis must
+    not drift between refreshes).
     """
     st = bstate.state
     n_valid = bstate.n_valid
@@ -171,7 +178,8 @@ def fold_in_bucketed(
     q_valid = (jnp.arange(bq) < b_valid)[:, None]
     new_ratings = jnp.where(q_valid, new_ratings, 0.0)
 
-    landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen at fit: ids < U0
+    if landmarks is None:
+        landmarks = st.ratings[st.landmark_idx]  # (n, P) frozen: ids < U0
     new_rep = masked_similarity(new_ratings, landmarks, spec.d1)  # (bq, n)
     new_rep = jnp.where(q_valid, new_rep, 0.0)
 

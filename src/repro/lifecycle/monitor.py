@@ -77,6 +77,7 @@ class Snapshot:
     coverage: float
     coverage_ratio: float  # coverage / base_coverage
     shard_skew: float = 1.0  # max/mean shard fill (sharded replay only)
+    tombstone_frac: float = 0.0  # tombstoned rows / appended rows (write path)
 
 
 def init_monitor(reservoir_size: int, n_base: int,
@@ -169,20 +170,27 @@ def reservoir_add(mon: MonitorState, key: jax.Array, users: jax.Array,
 
 @partial(jax.jit, static_argnames=("shard_cap",))
 def _holdout_stats(mon: MonitorState, graph, ratings, n_valid, id_map=None,
-                   shard_cap=None):
+                   shard_cap=None, tomb=None):
     """Reservoir MAE/RMSE under the current artifact.
 
     On the sharded path the reservoir keeps *logical* user ids (stable across
     capacity regrowth and refresh repacking); ``id_map`` — a capacity-padded
     logical→sharded row-id table — translates them, and ``shard_cap`` routes
-    the per-shard fill mask through ``predict_pairs_graph``."""
+    the per-shard fill mask through ``predict_pairs_graph``. ``tomb`` (the
+    write-path tombstone bitmap, row-id indexed — sharded ids when ``id_map``
+    is given) drops reservoir triples whose user was GDPR-removed: a deleted
+    user's held-out ratings must not count against the artifact, and their
+    neighbors are masked out of everyone else's predictions."""
     slot_valid = jnp.arange(mon.reservoir_size) < mon.res_filled
     users = jnp.where(slot_valid, mon.res_users, 0)
     if id_map is not None:
         users = id_map[users]
+    if tomb is not None:
+        slot_valid = slot_valid & ~tomb[users]
     items = jnp.where(slot_valid, mon.res_items, 0)
     preds = knn.predict_pairs_graph(graph, ratings, users, items,
-                                    n_valid=n_valid, shard_cap=shard_cap)
+                                    n_valid=n_valid, shard_cap=shard_cap,
+                                    tomb=tomb)
     err = (preds - mon.res_ratings) * slot_valid
     cnt = jnp.maximum(jnp.sum(slot_valid.astype(jnp.float32)), 1.0)
     mae = jnp.sum(jnp.abs(err)) / cnt
@@ -191,38 +199,47 @@ def _holdout_stats(mon: MonitorState, graph, ratings, n_valid, id_map=None,
     return mae, rmse, mon.res_filled, frac, mon.coverage, mon.base_coverage
 
 
-def holdout_snapshot(mon: MonitorState, bstate) -> Snapshot:
+def holdout_snapshot(mon: MonitorState, bstate, tomb=None,
+                     tombstone_frac: float = 0.0) -> Snapshot:
     """Score the reservoir with the current artifact → host :class:`Snapshot`.
 
     One executable per (reservoir, capacity) shape pair — evaluation shares
-    the bucket discipline of the serve path.
+    the bucket discipline of the serve path. ``tomb``/``tombstone_frac`` come
+    from the write path (``mutation.MutableState``): deleted users leave the
+    holdout and their fraction rides along for the compaction gate.
     """
     mae, rmse, cnt, frac, cov, base = _holdout_stats(
-        mon, bstate.state.graph, bstate.state.ratings, bstate.n_valid)
+        mon, bstate.state.graph, bstate.state.ratings, bstate.n_valid,
+        tomb=tomb)
     base = float(base)
     return Snapshot(
         mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),
         foldin_frac=float(frac), coverage=float(cov),
         coverage_ratio=float(cov) / max(base, 1e-9),
+        tombstone_frac=tombstone_frac,
     )
 
 
-def holdout_snapshot_sharded(mon: MonitorState, sstate, id_map) -> Snapshot:
+def holdout_snapshot_sharded(mon: MonitorState, sstate, id_map, tomb=None,
+                             tombstone_frac: float = 0.0) -> Snapshot:
     """:func:`holdout_snapshot` for a ShardedLandmarkState.
 
     ``id_map`` is a (S·C,) int32 table mapping logical user ids (what the
     reservoir stores) to sharded row ids — rebuilt by the serve loop on
     growth/refresh, padded to the row capacity so the executable is shared
-    per (reservoir, capacity) pair like the single-device snapshot."""
+    per (reservoir, capacity) pair like the single-device snapshot. ``tomb``
+    is sharded-row-id indexed (it is applied after the ``id_map``
+    translation)."""
     mae, rmse, cnt, frac, cov, base = _holdout_stats(
         mon, sstate.state.graph, sstate.state.ratings, sstate.n_valid,
-        id_map, shard_cap=sstate.capacity)
+        id_map, shard_cap=sstate.capacity, tomb=tomb)
     base = float(base)
     return Snapshot(
         mae=float(mae), rmse=float(rmse), holdout_count=int(cnt),
         foldin_frac=float(frac), coverage=float(cov),
         coverage_ratio=float(cov) / max(base, 1e-9),
         shard_skew=shard_skew(sstate.n_valid),
+        tombstone_frac=tombstone_frac,
     )
 
 

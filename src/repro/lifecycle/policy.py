@@ -32,6 +32,9 @@ class RefreshSpec:
     compact_max_rows: int = 65536  # uint16 id ceiling for compaction
     max_skew: float = 2.0  # rebalance when max/mean fill exceeds this ...
     rebalance_patience: int = 2  # ... for this many consecutive evaluations
+    max_tombstone_frac: float = 0.25  # refresh (and compact the tombstones
+    #                                   out) when deleted rows / appended
+    #                                   rows exceeds this
 
 
 @dataclasses.dataclass
@@ -65,6 +68,9 @@ def decide(pol: PolicyState, spec: RefreshSpec, snap: Snapshot
     if snap.foldin_frac > spec.max_foldin_frac:
         reasons.append(f"fold-in frac {snap.foldin_frac:.2f} > "
                        f"{spec.max_foldin_frac:.2f}")
+    if snap.tombstone_frac > spec.max_tombstone_frac:
+        reasons.append(f"tombstone frac {snap.tombstone_frac:.2f} > "
+                       f"{spec.max_tombstone_frac:.2f}")
 
     pol.streak = pol.streak + 1 if reasons else 0
     if pol.cooldown > 0:
@@ -94,6 +100,17 @@ def should_rebalance(pol: PolicyState, spec: RefreshSpec, skew: float) -> bool:
         pol.skew_streak = 0
         return True
     return False
+
+
+def should_compact_tombstones(spec: RefreshSpec, tombstone_frac: float
+                              ) -> bool:
+    """Write-path compaction gate: physically evict tombstoned rows
+    (``mutation.compact_tombstones``) when the dead fraction of the appended
+    row space crosses ``max_tombstone_frac``. Callers run it at a refresh
+    swap — the only point where row ids may be renumbered — so readers never
+    observe a remap mid-generation; between swaps deletions stay logical
+    (bitmap-masked) and exactly as invisible."""
+    return tombstone_frac > spec.max_tombstone_frac
 
 
 def should_compact(spec: RefreshSpec, n_rows: int) -> bool:

@@ -28,6 +28,7 @@ from .index import (
     ensure_index_capacity,
     grow_capacity,
     place_plan,
+    purge,
     quantize_payload,
     recall_at_k,
     resolve_ivf,
@@ -61,6 +62,7 @@ __all__ = [
     "grow_capacity",
     "kmeans",
     "place_plan",
+    "purge",
     "quantize_payload",
     "recall_at_k",
     "resolve_ivf",

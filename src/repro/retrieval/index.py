@@ -599,6 +599,7 @@ def search(
     self_ids: Optional[jax.Array] = None,  # (b,) candidate id of query i
     qb: int = 256,
     scorer: str = "auto",
+    tomb: Optional[jax.Array] = None,  # (U,) bool: tombstoned row ids
 ) -> Tuple[jax.Array, jax.Array]:
     """Top-k (vals, ids) per query over the probed cells — self-contained:
     candidate vectors come from the index's own posting-list payloads.
@@ -607,6 +608,14 @@ def search(
     slice + score their posting lists, exact top-k re-rank. Queries are
     processed in ``qb``-row blocks so the (qb, nprobe·cap, n) candidate
     tensor stays bounded.
+
+    ``tomb`` masks tombstoned candidates (GDPR-removed users,
+    ``repro.mutation``): a set bit makes that row id unreturnable even while
+    its posting-list slot still physically exists — deletion visibility
+    never waits on :func:`purge`. Only the gathered (…, cap) id slice
+    indexes ``tomb``. The fused kernel takes no tombstone operand, so a
+    ``tomb`` passed alongside ``scorer="fused"``/TPU-auto drops to the
+    gathered scorer — exactness over speed until the tombstones are purged.
 
     ``nprobe == n_clusters`` probes every cell: the candidate matrix is then
     query-independent (sorted by id once, so top_k's positional tie-break is
@@ -631,7 +640,7 @@ def search(
         sids = sids.at[:b].set(self_ids.astype(jnp.int32))
     slot = jnp.arange(cap)
 
-    if resolve_scorer(scorer) == "fused":
+    if resolve_scorer(scorer) == "fused" and tomb is None:
         # one-pass probe kernel: gather + score + top-k in VMEM, the
         # (b, nprobe*cap, n) candidate tensor never exists in HBM. Handles
         # every nprobe; at full probe the in-kernel (value desc, id asc)
@@ -658,10 +667,14 @@ def search(
             index.rows.reshape(c * cap, n)[order],
             None if index.scale is None else index.scale.reshape(-1)[order])
 
+        fdead = fvalid & tomb[flat] if tomb is not None else None
+
         def block(args):
             qq, ss = args  # (qb, n), (qb,)
             sims = dense_similarity(qq, cmat, measure)  # (qb, C*cap)
             invalid = (~fvalid)[None, :] | (flat[None, :] == ss[:, None])
+            if fdead is not None:
+                invalid = invalid | fdead[None, :]
             return _padded_topk(jnp.where(invalid, -jnp.inf, sims),
                                 jnp.broadcast_to(flat, sims.shape), k)
 
@@ -686,6 +699,8 @@ def search(
             sims = (score_candidates_kernel(qq, rows, measure) if use_pallas
                     else _gathered_sims(qq, rows, measure))
             invalid = ~vv | (cc == ss[:, None])
+            if tomb is not None:
+                invalid = invalid | tomb[cc]
             return _padded_topk(jnp.where(invalid, -jnp.inf, sims), cc, k)
 
         vals, ids = jax.lax.map(
@@ -705,6 +720,7 @@ def search_early_exit(
     *,
     self_ids: Optional[jax.Array] = None,
     patience: int = 2,
+    tomb: Optional[jax.Array] = None,  # (U,) bool: tombstoned row ids
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-query early-terminated probe: Lucene-style adaptive traversal.
 
@@ -746,8 +762,9 @@ def search_early_exit(
         cc = index.lists[pr].astype(jnp.int32)  # (b, cap)
         live = slot[None, :] < index.fill[pr][:, None]
         sims = _gathered_sims(q, rows, measure)
-        sims = jnp.where(~live | (cc == sids[:, None]) | ~active[:, None],
-                         -jnp.inf, sims)
+        dead = live & tomb[cc] if tomb is not None else False
+        sims = jnp.where(~live | dead | (cc == sids[:, None])
+                         | ~active[:, None], -jnp.inf, sims)
         # merge: best list first, so positional tie-break keeps incumbents
         # and an all-masked row (inactive query) is a bitwise no-op.
         mv, mi = _padded_topk(jnp.concatenate([vals, sims], axis=1),
@@ -765,6 +782,39 @@ def search_early_exit(
             jnp.ones((b,), bool))
     (vals, ids, _, probed, _), _ = jax.lax.scan(step, init, probe.T)
     return vals, ids, probed
+
+
+@jax.jit
+def purge(index: IVFIndex, tomb: jax.Array) -> IVFIndex:
+    """Physically drop tombstoned ids from every posting list, device-side.
+
+    Per cell, one stable boolean argsort slides the surviving entries down
+    in slot order (preserving within-cell arrival order, so tie-breaking and
+    nprobe nesting are untouched), fills shrink by the per-cell dead count,
+    and freed slots reset to the inert (id 0, zero payload) convention.
+    Runs at the same refresh boundary as ``mutation.compact_tombstones`` —
+    between purges the ``tomb`` mask on :func:`search` keeps deleted rows
+    invisible. Note this keeps the *ids* as they are: if the caller also
+    compacts the row space, rebuild or remap the index instead.
+    """
+    full = index.to_full() if index.is_compact else index
+    cap = full.capacity
+    slot = jnp.arange(cap)
+    valid = slot[None, :] < full.fill[:, None]  # (C, cap)
+    keep = valid & ~tomb[full.lists]
+    order = jnp.argsort(~keep, axis=1, stable=True)  # keepers first, in order
+    lists = jnp.take_along_axis(full.lists, order, axis=1)
+    rows = jnp.take_along_axis(full.rows, order[..., None], axis=1)
+    scale = None if full.scale is None \
+        else jnp.take_along_axis(full.scale, order, axis=1)
+    fill = jnp.sum(keep, axis=1).astype(full.fill.dtype)
+    live = slot[None, :] < fill[:, None]
+    # surviving ids fit whatever width they already had — no range re-check
+    return IVFIndex(full.centroids,
+                    jnp.where(live, lists, 0).astype(index.lists.dtype),
+                    jnp.where(live[..., None], rows, 0).astype(index.rows.dtype),
+                    fill,
+                    None if scale is None else jnp.where(live, scale, 0.0))
 
 
 def recall_at_k(got_ids: jax.Array, want_ids: jax.Array,

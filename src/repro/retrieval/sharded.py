@@ -230,8 +230,15 @@ def search_sharded(
     self_ids: Optional[jax.Array] = None,  # (b,) logical id to exclude
     scorer: str = "auto",
     local_budget: Optional[int] = None,
+    tomb: Optional[jax.Array] = None,  # (S*C,) replicated tombstone bitmap
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Probe-routed sharded search: (vals, ids, probed), all replicated.
+
+    ``tomb`` masks deleted rows at score time — posting lists keep logical
+    row ids, and the bitmap is replicated, so the mask is shard-local
+    (``tomb[candidate_id]``) with no extra collective. Like the
+    single-device path, a tombstone operand forces the gathered scorer
+    (the fused kernel has no tomb input).
 
     Each shard scores only probed cells it owns, local-first: probe columns
     are stably sorted so a shard's hits lead, and at most ``local_budget``
@@ -261,13 +268,16 @@ def search_sharded(
     csims = dense_similarity(q, index.centroids, measure)
     _, probe = jax.lax.top_k(csims, nprobe)  # (b, nprobe) replicated
     probe = probe.astype(jnp.int32)
-    use_fused = resolve_scorer(scorer) in ("fused", "pallas")
+    use_fused = (resolve_scorer(scorer) in ("fused", "pallas")
+                 and tomb is None)
     slot = jnp.arange(cap)
     opt_scale = [index.scale] if index.scale is not None else []
+    opt_tomb = [tomb] if tomb is not None else []
 
-    def inner(q, probe, sids, lists_l, rows_l, scale_l, fill):
+    def inner(q, probe, sids, lists_l, rows_l, scale_l, fill, tomb_r):
         lin = shard_linear_index(mesh, axes)
         scale_l = scale_l[0] if scale_l else None
+        tomb_r = tomb_r[0] if tomb_r else None
         local = (probe // c_ps) == lin  # (b, nprobe)
         order = jnp.argsort(~local, axis=1)  # stable: local hits lead,
         pr = jnp.take_along_axis(probe, order, axis=1)[:, :budget]
@@ -287,6 +297,8 @@ def search_sharded(
                 None if scale_l is None else scale_l.reshape(-1)[o])
             sims = dense_similarity(q, cmat, measure)
             invalid = (~fvalid)[None, :] | (flat[None, :] == sids[:, None])
+            if tomb_r is not None:
+                invalid = invalid | (fvalid & tomb_r[flat])[None, :]
             lv, li = _padded_topk(jnp.where(invalid, -jnp.inf, sims),
                                   jnp.broadcast_to(flat, sims.shape), k)
         elif use_fused:
@@ -310,8 +322,10 @@ def search_sharded(
                     & (slot[None, None, :]
                        < fill[jnp.clip(pr, 0, c - 1)][:, :, None]))
             sims = _gathered_sims(q, cand, measure)
-            sims = jnp.where(~live.reshape(b, m) | (cc == sids[:, None]),
-                             -jnp.inf, sims)
+            bad = ~live.reshape(b, m) | (cc == sids[:, None])
+            if tomb_r is not None:
+                bad = bad | tomb_r[cc]
+            sims = jnp.where(bad, -jnp.inf, sims)
             lv, li = _fast_topk(sims, cc, k)
             li = jnp.where(jnp.isneginf(lv), INT_MAX, li)
 
@@ -328,10 +342,12 @@ def search_sharded(
     return shard_map(
         inner, mesh=mesh,
         in_specs=(P(None, None), P(None, None), P(None), row2, row3,
-                  [row2] * len(opt_scale), P(None)),
+                  [row2] * len(opt_scale), P(None),
+                  [P(None)] * len(opt_tomb)),
         out_specs=(P(None, None), P(None, None), P(None)),
         check_rep=False,
-    )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill)
+    )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill,
+      opt_tomb)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "mesh", "axes",
@@ -349,6 +365,7 @@ def search_early_exit_sharded(
     self_ids: Optional[jax.Array] = None,
     patience: int = 2,
     local_budget: Optional[int] = None,
+    tomb: Optional[jax.Array] = None,  # (S*C,) replicated tombstone bitmap
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-query early exit with the ``search_sharded`` routing treatment.
 
@@ -389,10 +406,12 @@ def search_early_exit_sharded(
     probe = probe.astype(jnp.int32)
     slot = jnp.arange(cap)
     opt_scale = [index.scale] if index.scale is not None else []
+    opt_tomb = [tomb] if tomb is not None else []
 
-    def inner(q, probe, sids, lists_l, rows_l, scale_l, fill):
+    def inner(q, probe, sids, lists_l, rows_l, scale_l, fill, tomb_r):
         lin = shard_linear_index(mesh, axes)
         scale_l = scale_l[0] if scale_l else None
+        tomb_r = tomb_r[0] if tomb_r else None
         local = (probe // c_ps) == lin
         order = jnp.argsort(~local, axis=1)  # stable: local hits lead
         pr = jnp.take_along_axis(probe, order, axis=1)[:, :budget]
@@ -409,8 +428,10 @@ def search_early_exit_sharded(
             cc = lists_l[lc].astype(jnp.int32)
             live = slot[None, :] < fill[jnp.clip(prr, 0, c - 1)][:, None]
             sims = _gathered_sims(q, rows, measure)
-            sims = jnp.where(~live | (cc == sids[:, None])
-                             | ~score[:, None], -jnp.inf, sims)
+            bad = ~live | (cc == sids[:, None]) | ~score[:, None]
+            if tomb_r is not None:
+                bad = bad | (live & tomb_r[cc])
+            sims = jnp.where(bad, -jnp.inf, sims)
             mv, mi = _padded_topk(jnp.concatenate([vals, sims], axis=1),
                                   jnp.concatenate([ids, cc], axis=1), k)
             changed = jnp.any((mv != vals) | (mi != ids), axis=1)
@@ -441,7 +462,9 @@ def search_early_exit_sharded(
     return shard_map(
         inner, mesh=mesh,
         in_specs=(P(None, None), P(None, None), P(None), row2, row3,
-                  [row2] * len(opt_scale), P(None)),
+                  [row2] * len(opt_scale), P(None),
+                  [P(None)] * len(opt_tomb)),
         out_specs=(P(None, None), P(None, None), P(None)),
         check_rep=False,
-    )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill)
+    )(q, probe, sids, index.lists, index.rows, opt_scale, index.fill,
+      opt_tomb)

@@ -9,6 +9,8 @@ load-generator harness.
 from repro.serving.engine import (
     EngineConfig,
     LocalBackend,
+    MutableLocalBackend,
+    MutableShardedBackend,
     Request,
     RequestEngine,
     ShardedBackend,
@@ -24,6 +26,8 @@ __all__ = [
     "EngineConfig",
     "LatencyStats",
     "LocalBackend",
+    "MutableLocalBackend",
+    "MutableShardedBackend",
     "Request",
     "RequestEngine",
     "ShardedBackend",

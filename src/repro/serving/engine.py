@@ -15,10 +15,13 @@ is that server core, kept deliberately host-side and synchronous-testable:
              batch. Shapes are drawn from ``EngineConfig.batch_shapes()``,
              so compile count stays bounded at |shapes| x |buckets| per
              request kind — the same executables the lifecycle waves warm.
-  fold lane  writes go to a separate queue drained by ``pump_folds()`` on
-             its own cadence (own thread in threaded mode). A fold never
-             runs on the read path; it builds the next-generation state off
-             to the side and swaps it in with one atomic publish, so an
+  write lane writes — fold-ins AND in-place mutations (``"update"`` rating
+             replacement, ``"remove"`` GDPR deletion, ``repro.mutation``) —
+             go to a separate queue drained by ``pump_folds()`` on its own
+             cadence (own thread in threaded mode). A write never runs on
+             the read path; it builds the next-generation state off to the
+             side (mutations also drain their decremental repairs before
+             publishing) and swaps it in with one atomic publish, so an
              in-flight read batch keeps the generation it started with.
   bit-identity
              per-row kNN math is row-independent (reductions run over the
@@ -53,16 +56,18 @@ from repro.lifecycle import buckets
 from repro.serving.stats import latency_stats
 
 READ_KINDS = ("pair", "topn")
+WRITE_KINDS = ("fold", "update", "remove")
 
 
 @dataclasses.dataclass
 class Request:
     """One admitted request. ``done`` fires after its batch executes."""
 
-    kind: str                       # "pair" | "topn" | "fold"
-    users: Optional[np.ndarray]     # logical user ids (reads)
+    kind: str                       # "pair" | "topn" | "fold" | "update"
+    #                                 | "remove"
+    users: Optional[np.ndarray]     # logical user ids (reads + mutations)
     items: Optional[np.ndarray]     # item ids (pair reads only)
-    rows: Optional[np.ndarray]      # dense rating rows (folds only)
+    rows: Optional[np.ndarray]      # dense rating rows (fold/update writes)
     deadline: float                 # absolute monotonic seconds
     t_submit: float
     seq: int
@@ -252,6 +257,247 @@ class ShardedBackend:
         return gen + 1
 
 
+def _mutation_shape(m: int, lo: int = 8) -> int:
+    """Power-of-two mutation batch shapes (floor ``lo``) — compile count per
+    capacity stays logarithmic in the largest batch, like the read former."""
+    s = max(1, lo)
+    while s < m:
+        s *= 2
+    return s
+
+
+class MutableLocalBackend(LocalBackend):
+    """:class:`LocalBackend` with the write path open.
+
+    The published cell holds a ``mutation.MutableState`` (frozen landmark
+    basis + tombstone/dirty bitmaps) instead of a bare ``BucketedState``.
+    Reads thread the tombstone mask (a deleted user is invisible the moment
+    the remove publishes — no repair or compaction on the read path);
+    ``"update"`` / ``"remove"`` requests ride the write lane, drain their
+    decremental repairs, and publish the next generation exactly like a
+    fold. ``refresh()`` is the swap boundary: it compacts tombstones out
+    physically and returns the old→new row-id table for the caller's id
+    universe.
+    """
+
+    def __init__(self, bst: buckets.BucketedState, spec, *,
+                 repair_bq: int = 64, **kw):
+        super().__init__(bst, spec, **kw)
+        from repro import mutation
+        self._mut = mutation
+        self.repair_bq = repair_bq
+        self.repaired_rows = 0
+        self._pub = (mutation.from_bucketed(bst), 0)
+
+    @property
+    def tombstone_frac(self) -> float:
+        return self._pub[0].tombstone_frac()
+
+    def tomb(self) -> np.ndarray:
+        """Host view of the live generation's tombstone bitmap."""
+        return np.asarray(self._pub[0].tomb)
+
+    def predict_pairs(self, pub, users: np.ndarray, items: np.ndarray):
+        mst, _ = pub
+        return self._mut.predict_pairs(mst, jnp.asarray(users, jnp.int32),
+                                       jnp.asarray(items, jnp.int32))
+
+    def recommend_topn(self, pub, users: np.ndarray, n: int):
+        mst, _ = pub
+        return self._mut.recommend_topn(mst, jnp.asarray(users, jnp.int32),
+                                        n=n)
+
+    def fold_in(self, rows: np.ndarray, bq: int) -> int:
+        mst, gen = self._pub
+        new = self._mut.fold_in_rows(mst, jnp.asarray(rows), bq, self.spec,
+                                     min_bucket=self.min_bucket,
+                                     growth=self.growth)
+        jax.block_until_ready(new.bstate.state.ratings)
+        if new.capacity not in self.caps_used:
+            self._warm((new, gen + 1))
+            self.caps_used.add(new.capacity)
+        self._pub = (new, gen + 1)
+        return gen + 1
+
+    def _pad_mutation(self, ids: np.ndarray, rows: Optional[np.ndarray]):
+        m = len(ids)
+        shape = _mutation_shape(m)
+        pid = np.full(shape, -1, np.int64)
+        pid[:m] = ids
+        if rows is None:
+            return jnp.asarray(pid, jnp.int32), None, jnp.int32(m)
+        prows = np.zeros((shape, rows.shape[1]), np.float32)
+        prows[:m] = rows
+        return (jnp.asarray(pid, jnp.int32),
+                jnp.asarray(prows, jnp.float32), jnp.int32(m))
+
+    def _publish_mutation(self, mst) -> int:
+        _, gen = self._pub
+        self.repaired_rows += mst.dirty_count()
+        mst = self._mut.drain_repairs(mst, self.spec, self.repair_bq)
+        jax.block_until_ready(mst.bstate.state.ratings)
+        self._pub = (mst, gen + 1)
+        return gen + 1
+
+    def apply_update(self, ids: np.ndarray, rows: np.ndarray) -> int:
+        pid, prows, m = self._pad_mutation(np.asarray(ids),
+                                           np.asarray(rows))
+        return self._publish_mutation(
+            self._mut.update_ratings(self._pub[0], pid, prows, m, self.spec))
+
+    def apply_remove(self, ids: np.ndarray) -> int:
+        pid, _, m = self._pad_mutation(np.asarray(ids), None)
+        return self._publish_mutation(
+            self._mut.remove_users(self._pub[0], pid, m))
+
+    def refresh(self) -> Tuple[int, np.ndarray]:
+        """Refresh-boundary compaction: drain outstanding repairs, slide the
+        tombstoned rows out physically, publish. Returns ``(generation,
+        table)`` where ``table[old_id]`` is the surviving row's new id or
+        ``-1`` — the caller remaps its id universe once per swap; between
+        swaps ids are stable and deletions purely logical."""
+        mst, gen = self._pub
+        mst = self._mut.drain_repairs(mst, self.spec, self.repair_bq)
+        tomb = np.asarray(mst.tomb)
+        nv = int(mst.n_valid)
+        live = ~tomb[:nv]
+        table = np.full(len(tomb), -1, np.int64)
+        table[:nv][live] = np.arange(int(live.sum()))
+        mst = self._mut.compact_tombstones(mst)
+        jax.block_until_ready(mst.bstate.state.ratings)
+        self._pub = (mst, gen + 1)
+        return gen + 1, table
+
+
+class MutableShardedBackend(ShardedBackend):
+    """:class:`ShardedBackend` with the write path open — the published cell
+    holds a ``mutation.MutableStateSharded``; reads go through the routed
+    request path with the replicated tombstone mask; mutations translate
+    logical ids to sharded row ids against the same published tables, apply
+    owner-shard-local, and drain the all-gather repair merge before
+    publishing. ``refresh()`` compacts per shard (rows never change owner)
+    and renumbers the logical→(shard, slot) tables in place."""
+
+    def __init__(self, sstate, id_shard: np.ndarray, id_slot: np.ndarray,
+                 spec, *, repair_bq: int = 64, **kw):
+        super().__init__(sstate, id_shard, id_slot, spec, **kw)
+        from repro import mutation
+        self._mut = mutation
+        self.repair_bq = repair_bq
+        self.repaired_rows = 0
+        self._pub = (mutation.from_sharded(sstate),
+                     np.asarray(id_shard), np.asarray(id_slot), 0)
+
+    @property
+    def tombstone_frac(self) -> float:
+        return self._pub[0].tombstone_frac()
+
+    def tomb(self) -> np.ndarray:
+        """Host tombstone bitmap indexed by *logical* id (translated)."""
+        msst, id_shard, id_slot, _ = self._pub
+        t = np.asarray(msst.tomb)
+        return t[id_shard * msst.capacity + id_slot]
+
+    @staticmethod
+    def _sharded_ids(pub, users: np.ndarray) -> jnp.ndarray:
+        msst, id_shard, id_slot, _ = pub
+        sids = id_shard[users] * msst.capacity + id_slot[users]
+        return jnp.asarray(sids, jnp.int32)
+
+    def predict_pairs(self, pub, users: np.ndarray, items: np.ndarray):
+        from repro.serving.router import predict_pairs_routed
+        msst = pub[0]
+        return predict_pairs_routed(msst.sstate,
+                                    self._sharded_ids(pub, users),
+                                    jnp.asarray(items, jnp.int32),
+                                    tomb=msst.tomb)
+
+    def recommend_topn(self, pub, users: np.ndarray, n: int):
+        from repro.serving.router import recommend_topn_routed
+        msst = pub[0]
+        return recommend_topn_routed(msst.sstate,
+                                     self._sharded_ids(pub, users),
+                                     n=n, tomb=msst.tomb)
+
+    def fold_in(self, rows: np.ndarray, bq: int) -> int:
+        msst, id_shard, id_slot, gen = self._pub
+        new, shards, slots = self._mut.fold_in_rows_sharded(
+            msst, jnp.asarray(rows), bq, self.spec,
+            min_bucket=self.min_bucket, growth=self.growth)
+        jax.block_until_ready(new.sstate.state.ratings)
+        pub = (new,
+               np.concatenate([id_shard, np.asarray(shards)]),
+               np.concatenate([id_slot, np.asarray(slots)]),
+               gen + 1)
+        if new.capacity not in self.caps_used:
+            self._warm(pub)
+            self.caps_used.add(new.capacity)
+        self._pub = pub
+        return gen + 1
+
+    def _publish_mutation(self, msst) -> int:
+        _, id_shard, id_slot, gen = self._pub
+        self.repaired_rows += msst.dirty_count()
+        msst = self._mut.drain_repairs_sharded(msst, self.spec,
+                                               self.repair_bq)
+        jax.block_until_ready(msst.sstate.state.ratings)
+        self._pub = (msst, id_shard, id_slot, gen + 1)
+        return gen + 1
+
+    def _mutation_batch(self, ids: np.ndarray, rows: Optional[np.ndarray]):
+        pub = self._pub
+        m = len(ids)
+        shape = _mutation_shape(m)
+        sids = np.asarray(self._sharded_ids(pub, np.asarray(ids)), np.int64)
+        pid = np.full(shape, -1, np.int64)
+        pid[:m] = sids
+        if rows is None:
+            return jnp.asarray(pid, jnp.int32), None, jnp.int32(m)
+        prows = np.zeros((shape, rows.shape[1]), np.float32)
+        prows[:m] = rows
+        return (jnp.asarray(pid, jnp.int32),
+                jnp.asarray(prows, jnp.float32), jnp.int32(m))
+
+    def apply_update(self, ids: np.ndarray, rows: np.ndarray) -> int:
+        pid, prows, m = self._mutation_batch(np.asarray(ids),
+                                             np.asarray(rows))
+        return self._publish_mutation(
+            self._mut.update_ratings_sharded(self._pub[0], pid, prows, m,
+                                             self.spec))
+
+    def apply_remove(self, ids: np.ndarray) -> int:
+        pid, _, m = self._mutation_batch(np.asarray(ids), None)
+        return self._publish_mutation(
+            self._mut.remove_users_sharded(self._pub[0], pid, m))
+
+    def refresh(self) -> Tuple[int, np.ndarray]:
+        """Per-shard compaction at the swap boundary. Returns
+        ``(generation, table)`` over *logical* ids (-1 == removed); the
+        backend's own logical→(shard, slot) tables are renumbered in place,
+        so surviving logical ids keep working without caller involvement —
+        the table is for callers tracking removed ids."""
+        msst, id_shard, id_slot, gen = self._pub
+        msst = self._mut.drain_repairs_sharded(msst, self.spec,
+                                               self.repair_bq)
+        c = msst.capacity
+        tomb = np.asarray(msst.tomb)
+        sid = id_shard * c + id_slot
+        # new slot of a surviving row = live slots below it in its shard
+        live = ~tomb
+        below = np.zeros_like(tomb, np.int64)
+        for sh in range(msst.shard_count):
+            blk = live[sh * c:(sh + 1) * c]
+            below[sh * c:(sh + 1) * c] = np.cumsum(blk) - blk
+        dead = tomb[sid]
+        new_slot = np.where(dead, 0, below[sid])
+        msst = self._mut.compact_tombstones_sharded(msst)
+        jax.block_until_ready(msst.sstate.state.ratings)
+        table = np.where(dead, -1, np.arange(len(sid), dtype=np.int64))
+        self._pub = (msst, np.where(dead, 0, id_shard).astype(id_shard.dtype),
+                     new_slot.astype(id_slot.dtype), gen + 1)
+        return gen + 1, table
+
+
 class RequestEngine:
     """Deadline-heap admission + continuous micro-batching + async folds.
 
@@ -287,15 +533,16 @@ class RequestEngine:
         self._threads: List[threading.Thread] = []
         self._running = False
         # stats
-        self.submitted = {k: 0 for k in READ_KINDS + ("fold",)}
-        self.shed = {k: 0 for k in READ_KINDS + ("fold",)}
-        self.completed = {k: 0 for k in READ_KINDS + ("fold",)}
-        self.latencies = {k: [] for k in READ_KINDS + ("fold",)}
+        self.submitted = {k: 0 for k in READ_KINDS + WRITE_KINDS}
+        self.shed = {k: 0 for k in READ_KINDS + WRITE_KINDS}
+        self.completed = {k: 0 for k in READ_KINDS + WRITE_KINDS}
+        self.latencies = {k: [] for k in READ_KINDS + WRITE_KINDS}
         self.batches = 0
         self.exec_rows = 0
         self.pad_rows = 0
         self.nonfinite = 0
         self.folded_rows = 0
+        self.mutated_rows = 0
         self._verify_ring: List[Tuple[Request, object]] = []
         self._verify_cap = 64
 
@@ -324,9 +571,20 @@ class RequestEngine:
                 heapq.heappush(self._heap, (req.deadline, req.seq, req))
                 self._read_cond.notify()
             return req
-        if kind == "fold":
-            req = Request(kind, None, None, np.asarray(rows),
-                          now + slo / 1e3, now, 0)
+        if kind in WRITE_KINDS:
+            if kind != "fold" and not hasattr(self.backend, "apply_update"):
+                raise ValueError(
+                    f"kind {kind!r} needs a mutable backend "
+                    "(MutableLocalBackend / MutableShardedBackend)")
+            if kind == "fold":
+                req = Request(kind, None, None, np.asarray(rows),
+                              now + slo / 1e3, now, 0)
+            elif kind == "update":
+                req = Request(kind, np.asarray(users, np.int64), None,
+                              np.asarray(rows), now + slo / 1e3, now, 0)
+            else:  # remove
+                req = Request(kind, np.asarray(users, np.int64), None, None,
+                              now + slo / 1e3, now, 0)
             with self._lock:
                 if len(self._folds) >= self.config.fold_queue_cap:
                     self.shed[kind] += 1
@@ -423,9 +681,17 @@ class RequestEngine:
             n += 1
         return n
 
-    # ------------------------------------------------------------- fold lane
+    # ------------------------------------------------------------ write lane
+    def _apply_write(self, req: Request) -> int:
+        if req.kind == "fold":
+            return self.backend.fold_in(req.rows, self.config.fold_bq)
+        if req.kind == "update":
+            return self.backend.apply_update(req.users, req.rows)
+        return self.backend.apply_remove(req.users)
+
     def pump_folds(self, max_folds: Optional[int] = None) -> int:
-        """Drain queued fold-ins now (never called from the read path)."""
+        """Drain queued writes — fold-ins, updates, removals — now (never
+        called from the read path)."""
         n = 0
         while max_folds is None or n < max_folds:
             with self._lock:
@@ -434,17 +700,20 @@ class RequestEngine:
                 req = self._folds.pop(0)
             if getattr(self.backend, "serialize_folds", False):
                 with self.exec_lock:
-                    gen = self.backend.fold_in(req.rows, self.config.fold_bq)
+                    gen = self._apply_write(req)
             else:
-                gen = self.backend.fold_in(req.rows, self.config.fold_bq)
+                gen = self._apply_write(req)
             now = self.clock()
             req.result = gen
             req.generation = gen
             req.t_done = now
             with self._lock:
-                self.completed["fold"] += 1
-                self.latencies["fold"].append(now - req.t_submit)
-                self.folded_rows += len(req.rows)
+                self.completed[req.kind] += 1
+                self.latencies[req.kind].append(now - req.t_submit)
+                if req.kind == "fold":
+                    self.folded_rows += len(req.rows)
+                else:
+                    self.mutated_rows += len(req.users)
                 self._verify_ring.clear()   # prior generation retired
             req.done.set()
             n += 1
@@ -518,6 +787,9 @@ class RequestEngine:
                          max(1, self.pad_rows + self.exec_rows)),
             "nonfinite": self.nonfinite,
             "folded_rows": self.folded_rows,
+            "mutated_rows": self.mutated_rows,
+            "tombstone_frac": getattr(self.backend, "tombstone_frac", 0.0),
+            "repaired_rows": getattr(self.backend, "repaired_rows", 0),
             "generation": self.backend.generation,
             "reads_completed": reads,
         }

@@ -58,21 +58,28 @@ def _local_row_stats(ratings_l: jax.Array):
 
 
 @jax.jit
-def predict_pairs_routed(sstate, users: jax.Array, items: jax.Array
-                         ) -> jax.Array:
+def predict_pairs_routed(sstate, users: jax.Array, items: jax.Array,
+                         tomb=None) -> jax.Array:
     """Routed pair predictions: Eq. (1) with neighbor data owner-routed.
 
     ``users`` are sharded row ids (``shard * capacity + slot``), same as
     ``buckets.predict_pairs_sharded`` — and the results match it (and the
     single-device ``knn.predict_pairs_graph``) under ``np.array_equal``.
+    ``tomb`` is the write path's replicated (S·C,) tombstone bitmap
+    (``mutation.MutableStateSharded``): tombstoned neighbors contribute
+    nothing, in the same mask order as ``knn._mask_padded_rows`` (tomb
+    zeroing first, then the padded-slot mask) so the routed result stays
+    bit-identical to the single-device mutable read path.
     """
     mesh, axes = sstate.mesh, sstate.axes
     cap = sstate.capacity
     graph = sstate.state.graph
     row2 = P(axes, None)
+    opt_tomb = [tomb] if tomb is not None else []
 
-    def inner(gi_l, gw_l, ratings_l, nv, users, items):
+    def inner(gi_l, gw_l, ratings_l, nv, users, items, tomb_r):
         lin = shard_linear_index(mesh, axes)
+        tomb_r = tomb_r[0] if tomb_r else None
         mask_l, means_l = _local_row_stats(ratings_l)
         # phase 1: query owners contribute graph row + mean
         own_q = (users // cap) == lin
@@ -82,7 +89,9 @@ def predict_pairs_routed(sstate, users: jax.Array, items: jax.Array
         w = jax.lax.psum(
             jnp.where(own_q[:, None], gw_l[slot_q], 0.0), axes)
         mu_q = jax.lax.psum(jnp.where(own_q, means_l[slot_q], 0.0), axes)
-        # padded-slot masking — the same op as knn._mask_padded_rows
+        # tombstone + padded-slot masking — same order as _mask_padded_rows
+        if tomb_r is not None:
+            w = jnp.where(tomb_r[idx], 0.0, w)
         w = jnp.where(idx % cap < nv[idx // cap], w, 0.0)
         # phase 2: neighbor owners contribute rating-at-item + mean
         own_n = (idx // cap) == lin  # (b, k)
@@ -99,33 +108,37 @@ def predict_pairs_routed(sstate, users: jax.Array, items: jax.Array
 
     return shard_map(
         inner, mesh=mesh,
-        in_specs=(row2, row2, row2, P(None), P(None), P(None)),
+        in_specs=(row2, row2, row2, P(None), P(None), P(None),
+                  [P(None)] * len(opt_tomb)),
         out_specs=P(None),
         check_rep=False,
     )(graph.indices, graph.weights, sstate.state.ratings, sstate.n_valid,
-      users.astype(jnp.int32), items.astype(jnp.int32))
+      users.astype(jnp.int32), items.astype(jnp.int32), opt_tomb)
 
 
-def recommend_topn_routed(sstate, users: jax.Array, n: int = 10):
+def recommend_topn_routed(sstate, users: jax.Array, n: int = 10, tomb=None):
     """Routed top-N: neighbor *rows* are owner-routed as (b, k, P) centered
     contributions, then the exact ``knn._block_predict`` einsum epilogue +
     rated-item mask + ``lax.top_k`` replay on the routed operands.
 
     Matches ``buckets.recommend_topn_sharded`` (items and scores) under
-    ``np.array_equal``.
+    ``np.array_equal``. ``tomb`` masks tombstoned neighbors exactly like
+    :func:`predict_pairs_routed`.
     """
-    return _recommend_topn_routed(sstate, users, n)
+    return _recommend_topn_routed(sstate, users, n, tomb)
 
 
 @partial(jax.jit, static_argnames=("n",))
-def _recommend_topn_routed(sstate, users: jax.Array, n: int):
+def _recommend_topn_routed(sstate, users: jax.Array, n: int, tomb=None):
     mesh, axes = sstate.mesh, sstate.axes
     cap = sstate.capacity
     graph = sstate.state.graph
     row2 = P(axes, None)
+    opt_tomb = [tomb] if tomb is not None else []
 
-    def inner(gi_l, gw_l, ratings_l, nv, users):
+    def inner(gi_l, gw_l, ratings_l, nv, users, tomb_r):
         lin = shard_linear_index(mesh, axes)
+        tomb_r = tomb_r[0] if tomb_r else None
         mask_l, means_l = _local_row_stats(ratings_l)
         dt = ratings_l.dtype
         centered_l = (ratings_l - means_l[:, None]) * mask_l
@@ -139,6 +152,8 @@ def _recommend_topn_routed(sstate, users: jax.Array, n: int):
         mu_q = jax.lax.psum(jnp.where(own_q, means_l[slot_q], 0.0), axes)
         rated = jax.lax.psum(
             jnp.where(own_q[:, None], mask_l[slot_q], 0.0), axes)  # (b, P)
+        if tomb_r is not None:
+            w = jnp.where(tomb_r[idx], 0.0, w)
         w = jnp.where(idx % cap < nv[idx // cap], w, 0.0).astype(dt)
         # phase 2: neighbor owners contribute centered rows + masks
         own_n = (idx // cap) == lin  # (b, k)
@@ -158,11 +173,12 @@ def _recommend_topn_routed(sstate, users: jax.Array, n: int):
 
     return shard_map(
         inner, mesh=mesh,
-        in_specs=(row2, row2, row2, P(None), P(None)),
+        in_specs=(row2, row2, row2, P(None), P(None),
+                  [P(None)] * len(opt_tomb)),
         out_specs=(P(None, None), P(None, None)),
         check_rep=False,
     )(graph.indices, graph.weights, sstate.state.ratings, sstate.n_valid,
-      users.astype(jnp.int32))
+      users.astype(jnp.int32), opt_tomb)
 
 
 def materialization_check(sstate, b: int, n: int = 10):

@@ -305,3 +305,109 @@ def test_payload_quantization_recall_monotone_in_precision(seed, measure):
     # and the stated bound: the quantized rungs track f32 at the same nprobe
     assert rec["bf16"] >= rec["f32"] - 0.05, rec
     assert rec["int8"] >= rec["f32"] - 0.10, rec
+
+
+@st.composite
+def mutation_programs(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    d2 = draw(st.sampled_from(["cosine", "pearson", "euclidean"]))
+    ops = draw(st.lists(st.sampled_from(["update", "remove", "fold",
+                                         "compact"]),
+                        min_size=1, max_size=5))
+    return seed, d2, ops
+
+
+@given(mutation_programs())
+@settings(max_examples=10, deadline=None)
+def test_mutation_interleavings_oracle_exact(prog):
+    """Any interleaving of update / remove / fold-in / compact, once repairs
+    drain and tombstones compact, is **bitwise** a from-scratch build on the
+    surviving mutated matrix with the frozen landmark basis — and tombstoned
+    ids never appear in a live neighbor list at any intermediate point.
+
+    All row counts stay multiples of 8 (start 48, batches of 8) so the
+    oracle's GEMM shapes hit the 8-aligned bitwise-stability regime the
+    engine write lane pads to.
+    """
+    from repro import mutation
+    from repro.core.graph import build_neighbor_graph
+    from repro.core.landmark_cf import fit
+    from repro.core.types import LandmarkSpec, RatingMatrix
+
+    seed, d2, ops = prog
+    rng = np.random.default_rng(seed)
+    u0, p = 48, 32
+    spec = LandmarkSpec(n_landmarks=8, selection="popularity",
+                        k_neighbors=5, d2=d2)
+
+    def rand_rows(m):
+        r = rng.integers(1, 6, (m, p)).astype(np.float32)
+        return r * (rng.random((m, p)) < 0.4)
+
+    mirror = rand_rows(u0)  # physical rows, id == position
+    tomb = np.zeros(u0, bool)
+    st = fit(jax.random.PRNGKey(seed % 997),
+             RatingMatrix(jnp.asarray(mirror), u0, p), spec)
+    mst = mutation.from_fitted(st, min_bucket=32)
+    basis = mst.landmarks  # frozen for the whole program
+
+    def no_tomb_citations():
+        g = mst.bstate.state.graph
+        gi, gw = np.asarray(g.indices), np.asarray(g.weights)
+        n_valid = int(mst.bstate.n_valid)
+        live = np.nonzero(~tomb[:n_valid])[0]
+        dead = np.nonzero(tomb)[0]
+        cit = np.isin(gi[live], dead) & ~((gi[live] == 0) & (gw[live] == 0.0))
+        assert not cit.any(), "tombstoned id cited by a live neighbor list"
+
+    for op in ops:
+        live_ids = np.nonzero(~tomb)[0]
+        if op == "update":
+            m = int(rng.integers(1, 9))
+            ids = rng.choice(live_ids, size=min(m, len(live_ids)),
+                             replace=False)
+            rows = rand_rows(len(ids))
+            pids = np.full(8, -1, np.int32)
+            pids[: len(ids)] = ids
+            prows = np.zeros((8, p), np.float32)
+            prows[: len(ids)] = rows
+            mst = mutation.update_ratings(mst, jnp.asarray(pids),
+                                          jnp.asarray(prows),
+                                          jnp.int32(len(ids)), spec)
+            mirror[ids] = rows
+        elif op == "remove":
+            if len(live_ids) < 16:
+                continue  # keep at least 8 survivors
+            ids = rng.choice(live_ids, size=8, replace=False)
+            mst = mutation.remove_users(mst, jnp.asarray(ids, dtype=jnp.int32),
+                                        jnp.int32(8))
+            tomb[ids] = True
+        elif op == "fold":
+            rows = rand_rows(8)
+            mst = mutation.fold_in_rows(mst, rows, bq=8, spec=spec,
+                                        min_bucket=32)
+            mirror = np.concatenate([mirror, rows])
+            tomb = np.concatenate([tomb, np.zeros(8, bool)])
+        else:  # compact
+            mst = mutation.drain_repairs(mst, spec, bq=16)
+            mst = mutation.compact_tombstones(mst)
+            mirror = mirror[~tomb]
+            tomb = np.zeros(len(mirror), bool)
+        no_tomb_citations()
+
+    mst = mutation.drain_repairs(mst, spec, bq=16)
+    mst = mutation.compact_tombstones(mst)
+    mirror = mirror[~tomb]
+    n = len(mirror)
+    assert n % 8 == 0 and int(mst.bstate.n_valid) == n
+
+    rep_o = masked_similarity(jnp.asarray(mirror), basis, spec.d1)
+    graph_o = build_neighbor_graph(rep_o, spec.d2, spec.k_neighbors)
+    got = mst.bstate.state
+    np.testing.assert_array_equal(np.asarray(got.ratings[:n]), mirror)
+    np.testing.assert_array_equal(np.asarray(got.representation[:n]),
+                                  np.asarray(rep_o))
+    np.testing.assert_array_equal(np.asarray(got.graph.indices[:n]),
+                                  np.asarray(graph_o.indices))
+    np.testing.assert_array_equal(np.asarray(got.graph.weights[:n]),
+                                  np.asarray(graph_o.weights))
