@@ -1,0 +1,160 @@
+"""Schema validator for the observability exports (CI gate).
+
+``repro.launch.serve --engine --trace-dir T --metrics-json M`` writes two
+artifacts; this script fails loudly when either stops being what the docs
+promise (docs/observability.md):
+
+  trace.json     Chrome trace-event JSON — a ``traceEvents`` list whose
+                 ``ph:"X"`` complete events carry name/cat/ts/dur with
+                 ts/dur >= 0, plus ``ph:"M"`` thread-name metadata. The
+                 engine's ``cat:"engine"`` (per-batch) and ``cat:"write"``
+                 (fold/update/remove lane) tracks must both be present,
+                 and every ``parent`` id must reference an exported span
+                 id. ``--require-overlap`` additionally asserts at least
+                 one read-batch span overlaps a write-lane span in wall
+                 time — the engine's read/fold concurrency, visually the
+                 point of the trace.
+  metrics.json   registry snapshot — ``counters``/``gauges``/``histograms``
+                 maps; histogram edges strictly increasing with
+                 ``len(counts) == len(edges) + 1`` (overflow slot) and
+                 ``count == sum(counts)``; the ``engine.``, ``retrieval.``
+                 and ``lifecycle.`` series all present (the unified-layer
+                 guarantee: one export correlates all three subsystems).
+
+Usage::
+
+    python -m benchmarks.check_obs --trace /tmp/obs/trace.json \
+        --metrics /tmp/obs-metrics.json --require-overlap
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+REQUIRED_GROUPS = ("engine.", "retrieval.", "lifecycle.")
+
+
+def _fail(msg: str) -> None:
+    raise SystemExit(f"check_obs: {msg}")
+
+
+def check_trace(path: str, require_overlap: bool = False) -> dict:
+    doc = json.loads(Path(path).read_text())
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        _fail(f"{path}: traceEvents missing or empty")
+    spans: List[dict] = []
+    ids = set()
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") != "thread_name":
+                _fail(f"{path}: event {i}: unknown metadata {e.get('name')}")
+            continue
+        if ph != "X":
+            _fail(f"{path}: event {i}: unsupported phase {ph!r}")
+        for key in ("name", "cat", "ts", "dur", "pid", "tid"):
+            if key not in e:
+                _fail(f"{path}: event {i} ({e.get('name')}): missing {key}")
+        if e["ts"] < 0 or e["dur"] < 0:
+            _fail(f"{path}: event {i} ({e['name']}): negative ts/dur")
+        if "id" in e.get("args", {}):
+            ids.add(e["args"]["id"])
+        spans.append(e)
+    for e in spans:
+        parent = e.get("args", {}).get("parent")
+        if parent is not None and parent not in ids:
+            _fail(f"{path}: span {e['name']} cites unexported parent "
+                  f"{parent}")
+    cats = {e["cat"] for e in spans}
+    for want in ("engine", "write"):
+        if want not in cats:
+            _fail(f"{path}: no cat={want!r} spans — the engine "
+                  f"{'batch' if want == 'engine' else 'write-lane'} track "
+                  "is missing (tracks present: " + ", ".join(sorted(cats))
+                  + ")")
+    overlaps = 0
+    if require_overlap:
+        reads = [(e["ts"], e["ts"] + e["dur"]) for e in spans
+                 if e["cat"] == "engine" and e["name"].startswith("execute")]
+        writes = [(e["ts"], e["ts"] + e["dur"]) for e in spans
+                  if e["cat"] == "write"]
+        for w0, w1 in writes:
+            if any(r0 < w1 and r1 > w0 for r0, r1 in reads):
+                overlaps += 1
+        if not overlaps:
+            _fail(f"{path}: no read-batch span overlaps a write-lane span "
+                  "— the read/fold concurrency the trace exists to show "
+                  "is absent")
+    n_m = len(evs) - len(spans)
+    print(f"{path}: {len(spans)} spans ok ({n_m} thread-name records, "
+          f"cats {sorted(cats)}"
+          + (f", {overlaps}/{sum(1 for e in spans if e['cat'] == 'write')} "
+             "write spans overlap a read" if require_overlap else "")
+          + ")")
+    return doc
+
+
+def check_metrics(path: str, groups=REQUIRED_GROUPS) -> dict:
+    doc = json.loads(Path(path).read_text())
+    for sect in ("counters", "gauges", "histograms"):
+        if not isinstance(doc.get(sect), dict):
+            _fail(f"{path}: section {sect!r} missing or not a mapping")
+    for name, val in doc["counters"].items():
+        if not isinstance(val, int) or val < 0:
+            _fail(f"{path}: counter {name} = {val!r} (want int >= 0)")
+    for name, h in doc["histograms"].items():
+        edges, counts = h.get("edges"), h.get("counts")
+        if not edges or not counts:
+            _fail(f"{path}: histogram {name}: edges/counts missing")
+        if any(b <= a for a, b in zip(edges, edges[1:])):
+            _fail(f"{path}: histogram {name}: edges not strictly increasing")
+        if len(counts) != len(edges) + 1:
+            _fail(f"{path}: histogram {name}: len(counts)={len(counts)} != "
+                  f"len(edges)+1={len(edges) + 1} (overflow slot)")
+        if h.get("count") != sum(counts):
+            _fail(f"{path}: histogram {name}: count={h.get('count')} != "
+                  f"sum(counts)={sum(counts)}")
+    names = (set(doc["counters"]) | set(doc["gauges"])
+             | set(doc["histograms"]))
+    for group in groups:
+        if not any(n.startswith(group) for n in names):
+            _fail(f"{path}: no {group}* series — the unified export must "
+                  f"carry all of: {', '.join(groups)}")
+    print(f"{path}: {len(doc['counters'])} counters, {len(doc['gauges'])} "
+          f"gauges, {len(doc['histograms'])} histograms ok "
+          f"(groups: {', '.join(groups)})")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics snapshot JSON to validate")
+    ap.add_argument("--require-overlap", action="store_true",
+                    help="trace: additionally require a read-batch span "
+                    "overlapping a write-lane span")
+    ap.add_argument("--require-groups", default=",".join(REQUIRED_GROUPS),
+                    help="metrics: comma-separated series prefixes that "
+                    "must all be present (engine-mode exports carry the "
+                    "default three; wave-replay lifecycle modes have no "
+                    "engine.* series — pass 'retrieval.,lifecycle.')")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    if args.trace:
+        check_trace(args.trace, require_overlap=args.require_overlap)
+    if args.metrics:
+        groups = tuple(g for g in args.require_groups.split(",") if g)
+        check_metrics(args.metrics, groups=groups)
+    print("check_obs: all artifacts valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

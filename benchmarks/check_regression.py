@@ -15,8 +15,11 @@ schema::
       ]
     }
 
-Only *ratio* metrics (speedups, recalls, parity bits) go in the ledger —
-they are stable across machines in a way absolute microseconds are not.
+Only *ratio* metrics (speedups, recalls, parity bits) are gated — they are
+stable across machines in a way absolute microseconds are not. A metric may
+also be tracked with direction ``"gauge"``: it is extracted, appended, and
+printed by ``check`` for the trajectory record, but never gated (absolute
+QPS and span counts ride the ledger this way).
 Stability is still graded: recalls and parity bits are near-deterministic,
 while a wall-clock speedup inherits the noise of both its numerator and its
 denominator (a ~1s refit swings ±30% run-to-run on a shared host). A ledger
@@ -69,6 +72,8 @@ METRIC_SOURCES = {
     "shed_frac": ("engine_vs_waves", "shed_frac"),
     "engine_qps_speedup": ("engine_vs_waves", "qps_speedup"),
     "decremental_speedup": ("decremental_vs_refit", "speedup"),
+    "obs_overhead_ratio": ("obs_overhead", "ratio"),
+    "obs_on_qps": ("obs_overhead", "obs_on_qps"),
 }
 
 
@@ -161,6 +166,16 @@ def cmd_check(args) -> int:
             tol = float(tolerances.get(name, args.tolerance))
             if name not in prev and name not in new:
                 continue  # tracked but never measured — nothing to say yet
+            if direction == "gauge":
+                # tracked for the trajectory, never gated: absolute numbers
+                # (QPS, span counts) that vary host-to-host — printed so the
+                # CI log carries them, with no pass/fail judgement
+                parts = [f"{tag} {m[name]:.3f}"
+                         for m, tag in ((prev, prev_tag), (new, new_tag))
+                         if name in m]
+                print(f"{lpath}: {name} [gauge, ungated] "
+                      + " -> ".join(parts))
+                continue
             if name not in prev:
                 # first occurrence: this entry IS the baseline. Neither a
                 # crash nor a silent pass — say so, and the next PR's check

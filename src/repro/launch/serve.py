@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.configs import registry
 from repro.data import synthetic as S
 from repro.distributed.sharding import DEFAULT_RULES
@@ -369,6 +370,14 @@ def _serve_cf_lifecycle(args):
     rng = np.random.default_rng(0)
     bq = args.foldin  # fold-in batch bucket: b is padded to this, always
 
+    o = None
+    if args.trace_dir or args.metrics_json:
+        # lifecycle replay observability: per-wave drift gauges land in the
+        # registry, and the installed tracer catches the background refresh
+        # spans (refresh.fit / refresh.commit / refresh.ivf_rebuild)
+        o = obslib.Observability(sample_rate=args.sample_rate, seed=0)
+        obslib.install(o)
+
     # request-path executables: counted as deltas over this replay, so a warm
     # jit cache (e.g. pytest running other cases first) cannot skew the report
     families = {
@@ -463,6 +472,8 @@ def _serve_cf_lifecycle(args):
 
         # ---- drift detection + refresh decision ----------------------------
         snap = monitor.holdout_snapshot(mon, bst)
+        if o is not None:
+            monitor.publish_snapshot(o.registry, snap)
         if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
             pol.base_mae = snap.mae  # post-fit baseline, first healthy holdout
         fire, reasons = policy.decide(pol, rspec, snap)
@@ -525,6 +536,8 @@ def _serve_cf_lifecycle(args):
                 st_new.representation, jnp.ones(snap_u)))
             mon = monitor.rebase(mon, int(bst.n_valid), new_cov)
             snap, reasons = monitor.holdout_snapshot(mon, bst), []
+            if o is not None:
+                monitor.publish_snapshot(o.registry, snap)
             mae_post = snap.mae
             policy.on_swap(pol, gen, mae_post, rspec)
             last_refit = pending
@@ -638,6 +651,25 @@ def _serve_cf_lifecycle(args):
                 f"ivf smoke recall {np.mean(recalls):.3f} < {IVF_RECALL_SLO} "
                 "on the drifting stream — the nprobe escalation + skew "
                 "rebuild + refresh loop failed to hold the SLO")
+    if o is not None:
+        from repro.retrieval import publish_retrieval
+        obslib.publish_compile_counts(o.registry, families, cache0)
+        if use_ivf:
+            publish_retrieval(
+                o.registry, nprobe=retrieval.nprobe,
+                clusters=index.n_clusters,
+                recall=(float(np.mean(recalls)) if recalls
+                        else float("nan")),
+                early_exit=bool(args.early_exit), probes=len(recalls))
+        else:
+            publish_retrieval(o.registry)
+        if args.trace_dir:
+            tp = o.export_trace(args.trace_dir)
+            print(f"obs: {len(o.tracer.events())} spans -> {tp}")
+        if args.metrics_json:
+            print(f"obs: metrics snapshot -> "
+                  f"{o.export_metrics(args.metrics_json)}")
+        obslib.uninstall()
     print("cf lifecycle: done")
 
 
@@ -821,6 +853,11 @@ def _serve_cf_lifecycle_sharded(args):
     ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="cf_sharded_")
     rng = np.random.default_rng(0)
     bq = args.foldin
+
+    o = None
+    if args.trace_dir or args.metrics_json:
+        o = obslib.Observability(sample_rate=args.sample_rate, seed=0)
+        obslib.install(o)
 
     families = {
         "pair": knn.predict_pairs_graph,
@@ -1011,6 +1048,8 @@ def _serve_cf_lifecycle_sharded(args):
 
         # ---- drift detection + distributed refresh -------------------------
         snap = monitor.holdout_snapshot_sharded(mon, sst, id_map_arr())
+        if o is not None:
+            monitor.publish_snapshot(o.registry, snap)
         if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
             pol.base_mae = snap.mae
         fire, reasons = policy.decide(pol, rspec, snap)
@@ -1206,6 +1245,25 @@ def _serve_cf_lifecycle_sharded(args):
                 f"sharded ivf smoke recall {np.mean(recalls):.3f} < "
                 f"{IVF_RECALL_SLO} — the probe router + escalation + "
                 "refresh rebuild failed to hold the SLO on the mesh")
+    if o is not None:
+        from repro.retrieval import publish_retrieval
+        obslib.publish_compile_counts(o.registry, families, cache0)
+        if use_ivf:
+            publish_retrieval(
+                o.registry, nprobe=retrieval.nprobe,
+                clusters=index.n_clusters,
+                recall=(float(np.mean(recalls)) if recalls
+                        else float("nan")),
+                early_exit=bool(args.early_exit), probes=len(recalls))
+        else:
+            publish_retrieval(o.registry)
+        if args.trace_dir:
+            tp = o.export_trace(args.trace_dir)
+            print(f"obs: {len(o.tracer.events())} spans -> {tp}")
+        if args.metrics_json:
+            print(f"obs: metrics snapshot -> "
+                  f"{o.export_metrics(args.metrics_json)}")
+        obslib.uninstall()
     print("cf sharded lifecycle: done")
 
 
@@ -1405,15 +1463,40 @@ def _serve_cf_engine(args):
                 ee = float(rt.recall_at_k(ei, ie, ev, ve))
             return rec, float(jnp.mean(probed)), ee
 
+        esc_count = 0
         rec0, _pq, _ee = recall_probe()  # warm the probe executables
         while rec0 < IVF_RECALL_SLO and retrieval.nprobe < index.n_clusters:
             esc = min(index.n_clusters, max(retrieval.nprobe + 1,
                                             (retrieval.nprobe * 3) // 2))
             retrieval = dataclasses.replace(retrieval, nprobe=esc)
+            esc_count += 1
             rec0, _pq, _ee = recall_probe()
         print(f"retrieval: {'sharded ' if sharded else ''}ivf "
               f"C={index.n_clusters} nprobe={retrieval.nprobe} "
               f"pre-load recall@{kk}={rec0:.3f}")
+
+    o = None
+    if args.trace_dir or args.metrics_json or args.jax_profile:
+        o = obslib.Observability(sample_rate=args.sample_rate, seed=0)
+        obslib.install(o)
+    if o is not None and not mutations:
+        # obs-mode lifecycle feed (docs/observability.md): withhold the
+        # same holdout slice from each fold batch the --mutations monitor
+        # would, so the exported lifecycle series carries a real holdout
+        # MAE even when the write path is closed
+        from repro.configs.landmark_cf import REFRESH, SMOKE_REFRESH
+        from repro.lifecycle import monitor
+        obs_rspec = SMOKE_REFRESH if args.smoke else REFRESH
+        obs_cov = float(monitor.batch_coverage(
+            st.representation, jnp.ones((n0,), jnp.float32)))
+        obs_mon = monitor.init_monitor(obs_rspec.reservoir, n0, obs_cov)
+        obs_keys = iter(jax.random.split(jax.random.PRNGKey(17), 64))
+        # pre-warm the reservoir executable outside the timed window (the
+        # feed runs on the load-loop thread, same as the --mutations path)
+        jax.block_until_ready(_offer_holdout(
+            obs_mon, rng, next(obs_keys), 0, np.zeros(0, np.int32),
+            np.zeros(0, np.int32), np.zeros(0, np.float32),
+            obs_rspec.reservoir).res_users)
 
     if mutations:
         # engine-mode drift monitor (docs/mutation.md): the reservoir, the
@@ -1471,7 +1554,7 @@ def _serve_cf_engine(args):
                 mon, res_users=pad(nu, np.int32), res_items=pad(ri, np.int32),
                 res_ratings=pad(rr, np.float32), res_filled=jnp.int32(k))
 
-    eng = RequestEngine(backend, cfg, clock=time.perf_counter)
+    eng = RequestEngine(backend, cfg, clock=time.perf_counter, obs=o)
     # warm one executable per (batch shape, kind) — the compile budget the
     # run is held to (x live buckets; folds may grow the bucket once)
     pub = backend.snapshot()
@@ -1530,6 +1613,8 @@ def _serve_cf_engine(args):
 
     fold_batches = [np.asarray(_synth_ratings(rq, args.foldin, args.items))
                     for _ in range(4)]
+    prof = obslib.profile_trace(args.jax_profile)
+    prof.__enter__()
     eng.start()
     reqs = []
     t_start = time.perf_counter()
@@ -1538,7 +1623,10 @@ def _serve_cf_engine(args):
     fold_every = args.duration / 3.0
     next_fold = t_start + fold_every * 0.6
     next_probe = t_start + args.duration / 6.0
+    next_pub = t_start + 0.5  # metrics-registry publish cadence (obs only)
     folds_sent = 0
+    if o is not None and not mutations:
+        obs_next_start = backend.n_users  # logical id of the next folded row
     if mutations:
         mut_every = args.duration / 4.0
         next_mut = t_start + mut_every * 0.4
@@ -1604,6 +1692,16 @@ def _serve_cf_engine(args):
                                       backend._pub[0].landmarks, spec.d1),
                     jnp.int32(len(train)))
                 next_start += len(train)
+            elif o is not None:
+                # obs lifecycle feed: same withheld-slice discipline as the
+                # --mutations monitor, minus the write-path stats
+                train, hrows, hcols, hvals = _withhold(
+                    rq, fold_batches[folds_sent], obs_rspec.holdout_frac)
+                eng.submit("fold", rows=train)
+                obs_mon = _offer_holdout(obs_mon, rng, next(obs_keys),
+                                         obs_next_start, hrows, hcols,
+                                         hvals, obs_rspec.reservoir)
+                obs_next_start += len(train)
             else:
                 eng.submit("fold", rows=fold_batches[folds_sent])
             folds_sent += 1
@@ -1621,12 +1719,19 @@ def _serve_cf_engine(args):
                 ee_recalls.append(ee)
             next_probe += args.duration / 6.0
             continue
+        if o is not None and now >= next_pub:
+            # periodic registry publish: snapshots taken mid-window see
+            # live queue depth / latency series, not just the final state
+            eng.publish_metrics()
+            next_pub += 0.5
+            continue
         time.sleep(min(0.0005, max(0.0, next_arr - now)))
     for r in reqs:  # drain: every admitted request must complete
         if not r.done.wait(timeout=60.0):
             raise RuntimeError("admitted request never completed")
     t_last = max([r.t_done for r in reqs] or [t_start])
     eng.stop()
+    prof.__exit__(None, None, None)
 
     # post-run bitwise audit against the final generation, solo replay
     for _ in range(8):
@@ -1682,6 +1787,8 @@ def _serve_cf_engine(args):
             "write lane published with unrepaired rows")
         # the drift monitor's verdict on the window's live traffic
         snap = _drift_snapshot()
+        if o is not None:
+            monitor.publish_snapshot(o.registry, snap)
         if math.isnan(pol.base_mae) and snap.holdout_count >= rspec.min_holdout:
             pol.base_mae = snap.mae
         fire, reasons = policy.decide(pol, rspec, snap)
@@ -1700,6 +1807,8 @@ def _serve_cf_engine(args):
                 gen_new, table = backend.refresh()
             mon = _remap_reservoir(mon, table)
             post = _drift_snapshot()
+            if o is not None:
+                monitor.publish_snapshot(o.registry, post)
             policy.on_swap(pol, gen_new, post.mae, rspec)
             print(f"refresh swap: gen {gen_new}, compacted "
                   f"{int(np.sum(table[:n_pre] < 0))} tombstones, post-swap "
@@ -1724,6 +1833,45 @@ def _serve_cf_engine(args):
               f"{[f'{r:.3f}' for r in recalls]} "
               f"probed/q={np.mean(probeds):.1f}/{retrieval.nprobe}{ee_note}"
               if recalls else "ivf under load: window too short for probes")
+    if o is not None:
+        # final registry state: engine counters/histograms, per-family
+        # compile counts, the retrieval series (exact-mode stub when no
+        # index is up), and the lifecycle drift snapshot — one export
+        # carries all three groups (docs/observability.md)
+        eng.publish_metrics()
+        obslib.publish_compile_counts(o.registry, families, cache0)
+        from repro.retrieval import publish_retrieval
+        if use_ivf:
+            publish_retrieval(
+                o.registry, nprobe=retrieval.nprobe,
+                clusters=index.n_clusters,
+                probed_per_q=(float(np.mean(probeds)) if probeds
+                              else float(retrieval.nprobe)),
+                recall=(float(np.mean(recalls)) if recalls else rec0),
+                early_exit=bool(args.early_exit),
+                escalations=esc_count, probes=len(recalls))
+        else:
+            publish_retrieval(o.registry)
+        if not mutations:
+            pub_l = backend.snapshot()
+            if sharded:
+                osst, osh, osl, _ = pub_l
+                oidm = np.zeros(osst.shard_count * osst.capacity, np.int32)
+                osid = osh * osst.capacity + osl
+                oidm[:len(osid)] = osid
+                obs_snap = monitor.holdout_snapshot_sharded(
+                    obs_mon, osst, jnp.asarray(oidm))
+            else:
+                obs_snap = monitor.holdout_snapshot(obs_mon, pub_l[0])
+            monitor.publish_snapshot(o.registry, obs_snap)
+        if args.trace_dir:
+            tp = o.export_trace(args.trace_dir)
+            print(f"obs: {len(o.tracer.events())} spans "
+                  f"({o.tracer.dropped} dropped) -> {tp}")
+        if args.metrics_json:
+            mp = o.export_metrics(args.metrics_json)
+            print(f"obs: metrics snapshot -> {mp}")
+        obslib.uninstall()
     assert bad == 0, "micro-batched results diverged from solo execution"
     assert stats["nonfinite"] == 0, "non-finite predictions under load"
     if args.smoke:
@@ -1843,6 +1991,22 @@ def main(argv=None):
                     "accumulates holdout/volume/tombstone stats from live "
                     "traffic, and the lifecycle policy's verdict can fire a "
                     "tombstone-compacting refresh (docs/mutation.md)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="obs: write a Chrome trace-event JSON of the run "
+                    "(engine batch/request spans, write lane, lifecycle "
+                    "refresh/repair/compaction) into this directory "
+                    "(docs/observability.md)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="obs: write the unified metrics snapshot — engine, "
+                    "retrieval, and lifecycle series — to this JSON file")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="obs: per-request span sampling rate in [0, 1] "
+                    "(deterministic seeded sampler; per-batch and "
+                    "background spans are always recorded while tracing "
+                    "is enabled)")
+    ap.add_argument("--jax-profile", default=None,
+                    help="obs: capture a jax.profiler device trace of the "
+                    "engine load window into this directory")
     args = ap.parse_args(argv)
     if args.mutations and not args.engine:
         raise SystemExit("--mutations rides the request engine's write "

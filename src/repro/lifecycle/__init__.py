@@ -43,6 +43,7 @@ from .monitor import (
     holdout_snapshot_sharded,
     init_monitor,
     observe_fold_in,
+    publish_snapshot,
     rebase,
     reservoir_add,
     shard_skew,
@@ -80,6 +81,7 @@ __all__ = [
     "holdout_snapshot_sharded",
     "init_monitor",
     "observe_fold_in",
+    "publish_snapshot",
     "rebase",
     "reservoir_add",
     "PolicyState",

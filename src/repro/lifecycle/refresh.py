@@ -104,16 +104,30 @@ class RefreshManager:
 
         def work():
             try:
-                if self.mesh is not None:
-                    st = fit_distributed(k, jax.numpy.asarray(r), self.spec,
-                                         self.mesh, user_axes=self.row_axes)
-                else:
-                    st = fit(k, RatingMatrix(jax.numpy.asarray(r), r.shape[0],
-                                             r.shape[1]), self.spec)
-                jax.block_until_ready(st.graph.weights)
+                from repro import obs as obslib
+
+                with obslib.span("refresh.fit", cat="lifecycle",
+                                 args={"generation": generation,
+                                       "rows": int(r.shape[0])}):
+                    if self.mesh is not None:
+                        st = fit_distributed(k, jax.numpy.asarray(r),
+                                             self.spec, self.mesh,
+                                             user_axes=self.row_axes)
+                    else:
+                        st = fit(k, RatingMatrix(jax.numpy.asarray(r),
+                                                 r.shape[0], r.shape[1]),
+                                 self.spec)
+                    jax.block_until_ready(st.graph.weights)
                 compact = self.compact and r.shape[0] < self.compact_max_rows
-                save_landmark_state(self.ckpt_dir, st, compact=compact,
-                                    step=generation, keep=self.keep)
+                with obslib.span("refresh.commit", cat="lifecycle",
+                                 args={"generation": generation}):
+                    save_landmark_state(self.ckpt_dir, st, compact=compact,
+                                        step=generation, keep=self.keep)
+                o = obslib.current()
+                if o is not None and o.enabled:
+                    o.registry.counter("lifecycle.refreshes").inc()
+                    o.registry.gauge("lifecycle.refresh_generation").set(
+                        float(generation))
                 if self.ivf is not None:
                     # rebuild the retrieval index on the refreshed embedding:
                     # centroids move with the landmarks, inside the same
@@ -125,22 +139,26 @@ class RefreshManager:
                     from repro.retrieval import build_index, resolve_ivf
 
                     u = st.representation.shape[0]
-                    if self.mesh is not None:
-                        from repro.distributed import sharding as shd
-                        from repro.retrieval import (resolve_ivf_sharded,
-                                                     shard_index)
+                    with obslib.span("refresh.ivf_rebuild", cat="lifecycle",
+                                     args={"generation": generation}):
+                        if self.mesh is not None:
+                            from repro.distributed import sharding as shd
+                            from repro.retrieval import (resolve_ivf_sharded,
+                                                         shard_index)
 
-                        axes = shd.cf_row_axes(self.mesh, self.row_axes)
-                        cfg = resolve_ivf_sharded(
-                            self.ivf, u, shd.cf_shard_count(self.mesh, axes))
-                        index = shard_index(
-                            build_index(st.representation, cfg, self.spec.d2),
-                            self.mesh, axes)
-                    else:
-                        cfg = resolve_ivf(self.ivf, u)
-                        index = build_index(st.representation, cfg,
-                                            self.spec.d2)
-                    jax.block_until_ready(index.lists)
+                            axes = shd.cf_row_axes(self.mesh, self.row_axes)
+                            cfg = resolve_ivf_sharded(
+                                self.ivf, u,
+                                shd.cf_shard_count(self.mesh, axes))
+                            index = shard_index(
+                                build_index(st.representation, cfg,
+                                            self.spec.d2),
+                                self.mesh, axes)
+                        else:
+                            cfg = resolve_ivf(self.ivf, u)
+                            index = build_index(st.representation, cfg,
+                                                self.spec.d2)
+                        jax.block_until_ready(index.lists)
                     result = (generation, st, index)
                 else:
                     result = (generation, st)

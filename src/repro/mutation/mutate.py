@@ -400,10 +400,23 @@ def repair(
 def drain_repairs(mst: MutableState, spec: LandmarkSpec, bq: int = 64,
                   *, chunk: int = 4096, ivf_index=None,
                   nprobe: Optional[int] = None) -> MutableState:
-    """Host driver: run :func:`repair` until the dirty bitmap is empty."""
-    while mst.dirty_count() > 0:
-        mst, _ = repair(mst, bq, spec, chunk=chunk, ivf_index=ivf_index,
-                        nprobe=nprobe)
+    """Host driver: run :func:`repair` until the dirty bitmap is empty.
+
+    When an :mod:`repro.obs` instance is installed, the whole drain is one
+    ``repair.drain`` span and the repaired-row totals land on the
+    ``mutation.*`` counters — the write lane has no parameter path from
+    the serve loop, so this goes through the global hook."""
+    from repro import obs as obslib
+
+    n0 = int(mst.dirty_count())
+    with obslib.span("repair.drain", cat="mutation", args={"rows": n0}):
+        while mst.dirty_count() > 0:
+            mst, _ = repair(mst, bq, spec, chunk=chunk, ivf_index=ivf_index,
+                            nprobe=nprobe)
+    o = obslib.current()
+    if o is not None and o.enabled and n0:
+        o.registry.counter("mutation.repair_drains").inc()
+        o.registry.counter("mutation.repaired_rows").inc(n0)
     return mst
 
 
@@ -419,12 +432,20 @@ def compact_tombstones(mst: MutableState) -> MutableState:
     Host-side by design: it runs at a refresh/swap boundary, not on the
     request path, and keeps the bucket capacity (no recompiles).
     """
+    from repro import obs as obslib
+
     assert mst.dirty_count() == 0, "drain repairs before compacting"
     bst = mst.bstate
     st = bst.state
     cap = bst.capacity
     n_valid = int(bst.n_valid)
     tomb = np.asarray(mst.tomb)
+    with obslib.span("compact", cat="mutation",
+                     args={"dropped": int(tomb[:n_valid].sum())}):
+        return _compact_tombstones_body(mst, bst, st, cap, n_valid, tomb)
+
+
+def _compact_tombstones_body(mst, bst, st, cap, n_valid, tomb):
     live = ~tomb & (np.arange(cap) < n_valid)
     src = np.nonzero(live)[0]  # ascending — order-preserving
     n_live = len(src)

@@ -335,9 +335,20 @@ def repair_sharded(
 
 def drain_repairs_sharded(msst: MutableStateSharded, spec: LandmarkSpec,
                           bq: int = 64) -> MutableStateSharded:
-    """Host driver: run :func:`repair_sharded` until no dirty rows remain."""
-    while msst.dirty_count() > 0:
-        msst, _ = repair_sharded(msst, bq, spec.d2)
+    """Host driver: run :func:`repair_sharded` until no dirty rows remain.
+
+    Emits the same ``repair.drain`` span / ``mutation.*`` counters as the
+    single-device drain when an obs instance is installed."""
+    from repro import obs as obslib
+
+    n0 = int(msst.dirty_count())
+    with obslib.span("repair.drain", cat="mutation", args={"rows": n0}):
+        while msst.dirty_count() > 0:
+            msst, _ = repair_sharded(msst, bq, spec.d2)
+    o = obslib.current()
+    if o is not None and o.enabled and n0:
+        o.registry.counter("mutation.repair_drains").inc()
+        o.registry.counter("mutation.repaired_rows").inc(n0)
     return msst
 
 
@@ -352,6 +363,8 @@ def compact_tombstones_sharded(msst: MutableStateSharded
     never change owner shard — rebalancing stays the refresh/repack policy's
     job. Requires a drained dirty bitmap.
     """
+    from repro import obs as obslib
+
     assert msst.dirty_count() == 0, "drain repairs before compacting"
     sstate = msst.sstate
     st = sstate.state
@@ -360,6 +373,12 @@ def compact_tombstones_sharded(msst: MutableStateSharded
     n_valid = np.asarray(sstate.n_valid)
     gid = np.arange(s * c)
     live = (gid % c < n_valid[gid // c]) & ~tomb
+    with obslib.span("compact", cat="mutation",
+                     args={"dropped": int((~live & tomb).sum())}):
+        return _compact_sharded_body(msst, sstate, st, s, c, live)
+
+
+def _compact_sharded_body(msst, sstate, st, s, c, live):
 
     table = np.zeros((s * c,), np.int32)
     new_valid = np.zeros((s,), np.int32)

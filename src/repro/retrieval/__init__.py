@@ -37,6 +37,7 @@ from .index import (
     search_early_exit,
 )
 from .kmeans import assign_clusters, assign_clusters_kernel, kmeans
+from .observe import publish_retrieval
 from .sharded import (
     append_sharded,
     build_index_sharded,
@@ -62,6 +63,7 @@ __all__ = [
     "grow_capacity",
     "kmeans",
     "place_plan",
+    "publish_retrieval",
     "purge",
     "quantize_payload",
     "recall_at_k",

@@ -20,7 +20,11 @@ from repro.serving.router import (
     predict_pairs_routed,
     recommend_topn_routed,
 )
-from repro.serving.stats import LatencyStats, latency_stats
+from repro.serving.stats import (
+    LatencyStats,
+    histogram_latency,
+    latency_stats,
+)
 
 __all__ = [
     "EngineConfig",
@@ -31,6 +35,7 @@ __all__ = [
     "Request",
     "RequestEngine",
     "ShardedBackend",
+    "histogram_latency",
     "latency_stats",
     "materialization_check",
     "predict_pairs_routed",

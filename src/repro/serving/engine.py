@@ -52,8 +52,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obslib
 from repro.lifecycle import buckets
-from repro.serving.stats import latency_stats
+from repro.obs.registry import Histogram
+from repro.serving.stats import histogram_latency, latency_stats
 
 READ_KINDS = ("pair", "topn")
 WRITE_KINDS = ("fold", "update", "remove")
@@ -76,6 +78,9 @@ class Request:
     result: object = None           # (b,) preds | (items, scores) | gen
     generation: int = -1            # generation the request executed against
     t_done: float = 0.0
+    t_pickup: float = 0.0           # batch-former pickup / write-lane drain
+    sampled: bool = False           # selected by the trace sampler
+    trace_id: int = 0               # root span id when sampled
 
     @property
     def n_rows(self) -> int:
@@ -518,10 +523,17 @@ class RequestEngine:
     """
 
     def __init__(self, backend, config: EngineConfig = EngineConfig(),
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional["obslib.Observability"] = None):
         self.backend = backend
         self.config = config
         self.clock = clock
+        # obs is optional; the tracer reference is always valid (the
+        # DISABLED singleton's inert tracer when off) so hot-path guards
+        # are a single ``.active`` attribute read, never a None check +
+        # attribute chain.
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else obslib.DISABLED.tracer
         self.exec_lock = threading.Lock()
         self._lock = threading.Lock()
         self._read_cond = threading.Condition(self._lock)
@@ -536,7 +548,10 @@ class RequestEngine:
         self.submitted = {k: 0 for k in READ_KINDS + WRITE_KINDS}
         self.shed = {k: 0 for k in READ_KINDS + WRITE_KINDS}
         self.completed = {k: 0 for k in READ_KINDS + WRITE_KINDS}
-        self.latencies = {k: [] for k in READ_KINDS + WRITE_KINDS}
+        # bounded log-bucketed histograms (ms) — fixed memory regardless of
+        # how long the server runs, quantiles within one bucket width
+        self.latencies = {k: Histogram() for k in READ_KINDS + WRITE_KINDS}
+        self.launches: dict = {}        # (kind, pad_shape) -> launch count
         self.batches = 0
         self.exec_rows = 0
         self.pad_rows = 0
@@ -570,6 +585,10 @@ class RequestEngine:
                 self.submitted[kind] += 1
                 heapq.heappush(self._heap, (req.deadline, req.seq, req))
                 self._read_cond.notify()
+            tr = self._tracer
+            if tr.active and tr.should_sample():
+                req.sampled = True
+                req.trace_id = tr.new_id()
             return req
         if kind in WRITE_KINDS:
             if kind != "fold" and not hasattr(self.backend, "apply_update"):
@@ -593,6 +612,10 @@ class RequestEngine:
                 self.submitted[kind] += 1
                 self._folds.append(req)
                 self._fold_cond.notify()
+            tr = self._tracer
+            if tr.active and tr.should_sample():
+                req.sampled = True
+                req.trace_id = tr.new_id()
             return req
         raise ValueError(f"unknown request kind {kind!r}")
 
@@ -636,7 +659,10 @@ class RequestEngine:
             if kind == "pair":
                 items[off:off + r.n_rows] = r.items
             off += r.n_rows
+        tr = self._tracer
+        t_ready = self.clock() if tr.active else 0.0
         with self.exec_lock:
+            t_launch = self.clock() if tr.active else 0.0
             pub = self.backend.snapshot()
             if kind == "pair":
                 out = np.asarray(
@@ -661,13 +687,31 @@ class RequestEngine:
             r.generation = gen
             r.t_done = now
             self.completed[kind] += 1
-            self.latencies[kind].append(now - r.t_submit)
+            self.latencies[kind].record((now - r.t_submit) * 1e3)
             r.done.set()
             if len(self._verify_ring) < self._verify_cap:
                 self._verify_ring.append((r, r.result))
         self.batches += 1
         self.exec_rows += rows
         self.pad_rows += shape - rows
+        key = (kind, shape)
+        self.launches[key] = self.launches.get(key, 0) + 1
+        if tr.active:
+            bid = batch[0].seq
+            evs = []
+            if t_launch > t_ready:
+                evs.append({"name": "exec_wait", "cat": "engine",
+                            "t0": t_ready, "t1": t_launch,
+                            "args": {"kind": kind}})
+            evs.append({"name": f"execute[{kind}]", "cat": "engine",
+                        "t0": t_launch, "t1": now,
+                        "args": {"rows": rows, "shape": shape, "gen": gen,
+                                 "batch": bid}})
+            tr.complete_many(evs)
+            recs = [(kind, r.t_submit, r.t_pickup, now, r.trace_id,
+                     r.n_rows, gen, bid) for r in batch if r.sampled]
+            if recs:
+                tr.complete_requests(recs, child="exec")
 
     def pump_reads(self, max_batches: Optional[int] = None) -> int:
         """Drain queued reads now; returns the number of batches executed."""
@@ -677,6 +721,9 @@ class RequestEngine:
                 batch = self._form_batch()
             if not batch:
                 break
+            tp = self.clock()
+            for r in batch:
+                r.t_pickup = tp
             self._execute(batch)
             n += 1
         return n
@@ -693,15 +740,20 @@ class RequestEngine:
         """Drain queued writes — fold-ins, updates, removals — now (never
         called from the read path)."""
         n = 0
+        tr = self._tracer
         while max_folds is None or n < max_folds:
             with self._lock:
                 if not self._folds:
                     break
                 req = self._folds.pop(0)
+            t_pickup = self.clock() if tr.active else 0.0
+            req.t_pickup = t_pickup
             if getattr(self.backend, "serialize_folds", False):
                 with self.exec_lock:
+                    t_apply = self.clock() if tr.active else t_pickup
                     gen = self._apply_write(req)
             else:
+                t_apply = t_pickup
                 gen = self._apply_write(req)
             now = self.clock()
             req.result = gen
@@ -709,13 +761,24 @@ class RequestEngine:
             req.t_done = now
             with self._lock:
                 self.completed[req.kind] += 1
-                self.latencies[req.kind].append(now - req.t_submit)
+                self.latencies[req.kind].record((now - req.t_submit) * 1e3)
                 if req.kind == "fold":
                     self.folded_rows += len(req.rows)
                 else:
                     self.mutated_rows += len(req.users)
                 self._verify_ring.clear()   # prior generation retired
             req.done.set()
+            if tr.active:
+                if t_apply > t_pickup:
+                    tr.complete("exec_wait", "engine", t_pickup, t_apply,
+                                args={"kind": req.kind})
+                tr.complete(f"apply[{req.kind}]", "write", t_apply, now,
+                            args={"rows": req.n_rows, "gen": gen})
+                if req.sampled:
+                    tr.complete_requests(
+                        [(req.kind, req.t_submit, t_pickup, now,
+                          req.trace_id, req.n_rows, gen, None)],
+                        child="apply")
             n += 1
         return n
 
@@ -770,6 +833,12 @@ class RequestEngine:
     def stats(self) -> dict:
         offered = sum(self.submitted.values()) + sum(self.shed.values())
         reads = sum(self.completed[k] for k in READ_KINDS)
+        read_h = Histogram()
+        for k in READ_KINDS:
+            read_h.merge(self.latencies[k])
+        with self._lock:
+            queue_rows = self._queued_rows
+            write_queue = len(self._folds)
         return {
             "offered": offered,
             "submitted": dict(self.submitted),
@@ -777,9 +846,16 @@ class RequestEngine:
             "shed": dict(self.shed),
             "shed_frac": (sum(self.shed.values()) / offered
                           if offered else 0.0),
-            "read_latency": latency_stats(
-                [t for k in READ_KINDS for t in self.latencies[k]]),
-            "fold_latency": latency_stats(self.latencies["fold"]),
+            # per-kind shed fractions: write-lane pressure is visible
+            # separately from read pressure instead of one aggregate
+            "shed_frac_by_kind": {
+                k: (self.shed[k] / (self.submitted[k] + self.shed[k])
+                    if self.submitted[k] + self.shed[k] else 0.0)
+                for k in READ_KINDS + WRITE_KINDS},
+            "queue_rows": queue_rows,
+            "write_queue": write_queue,
+            "read_latency": histogram_latency(read_h),
+            "fold_latency": histogram_latency(self.latencies["fold"]),
             "batches": self.batches,
             "mean_batch_rows": (self.exec_rows / self.batches
                                 if self.batches else 0.0),
@@ -793,6 +869,41 @@ class RequestEngine:
             "generation": self.backend.generation,
             "reads_completed": reads,
         }
+
+    def publish_metrics(self) -> None:
+        """Copy the engine's hot-path stats into the obs registry — called
+        at snapshot points (periodic, end-of-run), never per request, so
+        the registry adds zero cost to the serve path. Idempotent: counters
+        and histograms are published as absolute copies (``set`` /
+        ``publish_histogram``), never re-accumulated."""
+        o = self.obs
+        if o is None or not o.enabled:
+            return
+        reg = o.registry
+        for k in READ_KINDS + WRITE_KINDS:
+            reg.counter(f"engine.submitted.{k}").set(self.submitted[k])
+            reg.counter(f"engine.shed.{k}").set(self.shed[k])
+            reg.counter(f"engine.completed.{k}").set(self.completed[k])
+            reg.publish_histogram(f"engine.latency_ms.{k}",
+                                  self.latencies[k])
+        for (kind, shape), c in list(self.launches.items()):
+            reg.counter(f"exec.engine.{kind}.b{shape}.launches").set(c)
+        reg.counter("engine.batches").set(self.batches)
+        reg.counter("engine.exec_rows").set(self.exec_rows)
+        reg.counter("engine.pad_rows").set(self.pad_rows)
+        reg.counter("engine.nonfinite").set(self.nonfinite)
+        reg.counter("engine.folded_rows").set(self.folded_rows)
+        reg.counter("engine.mutated_rows").set(self.mutated_rows)
+        with self._lock:
+            queue_rows = self._queued_rows
+            write_queue = len(self._folds)
+        reg.gauge("engine.queue_rows").set(float(queue_rows))
+        reg.gauge("engine.write_queue").set(float(write_queue))
+        reg.gauge("engine.row_occupancy").set(
+            self.exec_rows / max(1, self.exec_rows + self.pad_rows))
+        reg.gauge("engine.generation").set(float(self.backend.generation))
+        reg.gauge("engine.tombstone_frac").set(
+            float(getattr(self.backend, "tombstone_frac", 0.0)))
 
     def verify_sample(self, limit: int = 16) -> Tuple[int, int]:
         """Re-run recent completed reads SOLO against their generation and

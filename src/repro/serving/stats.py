@@ -43,3 +43,14 @@ def latency_stats(ts: Sequence[float]) -> LatencyStats:
     ms = np.asarray(ts, dtype=float) * 1e3
     p50, p95, p99 = (float(x) for x in np.percentile(ms, (50, 95, 99)))
     return LatencyStats(len(ms), p50, p95, p99)
+
+
+def histogram_latency(hist) -> LatencyStats:
+    """:class:`LatencyStats` view of an ``obs.Histogram`` recorded in
+    milliseconds — the engine's bounded replacement for raw latency lists.
+    Quantiles are the histogram's bucket-resolved order statistics, within
+    one bucket width (≤ ``growth - 1`` relative) of exact."""
+    if not hist.count:
+        return LatencyStats(0, float("nan"), float("nan"), float("nan"))
+    return LatencyStats(hist.count, hist.percentile(50),
+                        hist.percentile(95), hist.percentile(99))
